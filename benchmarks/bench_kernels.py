@@ -1,0 +1,43 @@
+"""Kernel microbenchmarks (interpret mode on CPU: correctness plumbing +
+relative cost only; real perf numbers require TPU).  Derived: throughput
+relative to the pure-jnp oracle on the same host."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.kernels import ops, ref
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (512, 512))
+
+    k_fn = jax.jit(lambda x: ops.quantize_dequantize(x, key, bits=8))
+    k_fn(x).block_until_ready()
+    us_k = timed(lambda: k_fn(x).block_until_ready())
+    rows.append(("kernels/quant8_interp", us_k, "shape=512x512"))
+
+    W = jax.random.normal(key, (512, 256)) * 0.1
+    s = jnp.abs(W)
+    nm_fn = jax.jit(lambda W, s: ops.prune_nm(W, s, 2, 4))
+    nm_fn(W, s)[0].block_until_ready()
+    us = timed(lambda: nm_fn(W, s)[0].block_until_ready())
+    rows.append(("kernels/nm_prune_interp", us, "shape=512x256 2:4"))
+
+    X = jax.random.normal(jax.random.PRNGKey(1), (128, 512))
+    w_fn = jax.jit(lambda W, X: ops.prune_scored(W, X, mode="ria", sparsity=0.5))
+    w_fn(W, X)[0].block_until_ready()
+    us = timed(lambda: w_fn(W, X)[0].block_until_ready())
+    rows.append(("kernels/wanda_score_interp", us, "mode=ria 512x256"))
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

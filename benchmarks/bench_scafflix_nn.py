@@ -1,0 +1,136 @@
+"""Fig 3.2 reproduction: Scafflix generalization on a federated NEURAL NET.
+
+The paper trains CNN/RNN models on FEMNIST/Shakespeare; offline we use the
+synthetic non-IID classification task (Dirichlet label skew across 10
+clients) with an MLP — the phenomenon under test is the same: personalized
+Scafflix reaches higher held-out accuracy in fewer communication rounds than
+FedAvg and than FLIX-with-SGD.
+
+Scafflix runs on the *flattened* parameter vector per client (the algorithm
+is dimension-agnostic); per-client personalized models are evaluated on
+per-client held-out splits (alpha-mixture of global and local-optimal nets).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from benchmarks.common import emit
+from repro.core.fedp3 import init_mlp_params, make_classification, mlp_apply, xent
+from repro.core.scafflix import scafflix_init, scafflix_run
+from repro.data.federated import dirichlet_split
+
+N_CLIENTS = 10
+SIZES = [24, 48, 48, 6]
+ROUNDS = 60
+P_COMM = 0.2
+
+
+def _federated_data(seed=0, per_client=120):
+    X, y = make_classification(n=4000, d=SIZES[0], nclass=SIZES[-1], seed=seed,
+                               sep=0.9, label_noise=0.08)
+    idx = dirichlet_split(y, N_CLIENTS, alpha=0.5, seed=seed)
+    rng = np.random.default_rng(seed)
+    Xtr, Ytr, Xte, Yte = [], [], [], []
+    for ix in idx:
+        ix = rng.permutation(ix)
+        take = rng.choice(ix, size=per_client, replace=True)
+        test = rng.choice(ix, size=per_client // 2, replace=True)
+        Xtr.append(X[take]); Ytr.append(y[take])
+        Xte.append(X[test]); Yte.append(y[test])
+    return (jnp.asarray(np.stack(Xtr)), jnp.asarray(np.stack(Ytr)),
+            jnp.asarray(np.stack(Xte)), jnp.asarray(np.stack(Yte)))
+
+
+def run():
+    Xtr, Ytr, Xte, Yte = _federated_data()
+    params0 = init_mlp_params(jax.random.PRNGKey(0), SIZES)
+    flat0, unravel = ravel_pytree(params0)
+    d = flat0.shape[0]
+
+    def client_loss(flat, Xc, Yc):
+        return xent(unravel(flat), Xc, Yc, SIZES[-1])
+
+    grad_one = jax.grad(client_loss)
+    grad_all = jax.jit(jax.vmap(grad_one, in_axes=(0, 0, 0)))
+
+    def acc_personalized(x_global, x_star, alphas):
+        xt = alphas[:, None] * x_global[None] + (1 - alphas[:, None]) * x_star
+        accs = []
+        for i in range(N_CLIENTS):
+            logits = mlp_apply(unravel(xt[i]), Xte[i])
+            accs.append(float(jnp.mean(jnp.argmax(logits, 1) == Yte[i])))
+        return float(np.mean(accs))
+
+    # ---- per-client local optima x_i* (the FLIX anchors)
+    t0 = time.perf_counter()
+    @jax.jit
+    def local_opt(Xc, Yc):
+        def body(x, _):
+            return x - 0.3 * grad_one(x, Xc, Yc), None
+        x, _ = jax.lax.scan(body, flat0, None, length=300)
+        return x
+
+    x_star = jnp.stack([local_opt(Xtr[i], Ytr[i]) for i in range(N_CLIENTS)])
+    t_local = (time.perf_counter() - t0) * 1e6
+
+    rows = []
+    grads_at = lambda xt: grad_all(xt, Xtr, Ytr)
+
+    # ---- Scafflix at several alphas (personalization sweep, Fig 3.2/3.3a)
+    for alpha in (0.3, 0.5, 1.0):
+        alphas = jnp.full((N_CLIENTS,), alpha)
+        gammas = jnp.full((N_CLIENTS,), 0.1)
+        st = scafflix_init(flat0, N_CLIENTS, x_star)
+        t0 = time.perf_counter()
+        st, (_, comms) = scafflix_run(jax.random.PRNGKey(1), st, grads_at,
+                                      P_COMM, gammas, alphas, ROUNDS)
+        us = (time.perf_counter() - t0) * 1e6
+        acc = acc_personalized(jnp.mean(st.x, 0), x_star, alphas)
+        rows.append((f"scafflix_fig3.2/scafflix_alpha={alpha}", us,
+                     f"test_acc={acc:.3f};comms={int(np.asarray(comms).sum())}"))
+
+    # ---- FedAvg baseline: local SGD + periodic averaging (same comm budget)
+    t0 = time.perf_counter()
+    x = jnp.tile(flat0[None], (N_CLIENTS, 1))
+    comms = 0
+    rng = np.random.default_rng(2)
+    for r in range(ROUNDS):
+        x = x - 0.1 * grads_at(x)
+        if rng.random() < P_COMM:  # same expected communication as Scafflix
+            x = jnp.tile(jnp.mean(x, 0)[None], (N_CLIENTS, 1))
+            comms += 1
+    us = (time.perf_counter() - t0) * 1e6
+    logits_acc = []
+    for i in range(N_CLIENTS):
+        logits = mlp_apply(unravel(jnp.mean(x, 0)), Xte[i])
+        logits_acc.append(float(jnp.mean(jnp.argmax(logits, 1) == Yte[i])))
+    rows.append(("scafflix_fig3.2/fedavg", us,
+                 f"test_acc={np.mean(logits_acc):.3f};comms={comms}"))
+
+    # ---- FLIX with plain SGD (the paper's FLIX baseline)
+    alphas = jnp.full((N_CLIENTS,), 0.3)
+    x = flat0
+    t0 = time.perf_counter()
+    for r in range(ROUNDS):
+        xt = alphas[:, None] * x[None] + (1 - alphas[:, None]) * x_star
+        g = jnp.mean(alphas[:, None] * grads_at(xt), axis=0)
+        x = x - 0.1 * g
+    us = (time.perf_counter() - t0) * 1e6
+    acc = acc_personalized(x, x_star, alphas)
+    rows.append(("scafflix_fig3.2/flix_sgd_alpha=0.3", us,
+                 f"test_acc={acc:.3f};comms={ROUNDS}"))
+    rows.append(("scafflix_fig3.2/local_opt_setup", t_local, "300 steps/client"))
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Ch. 5 reproductions:
+  Fig 5.1/5.2 — total communication cost TK vs local rounds K per learning rate
+  Fig 5.3     — sampling strategy comparison (stratified vs nice vs block)
+  Fig 5.6     — hierarchical FL cost (c1=0.05, c2=1)
+Derived: optimal (K, cost) per configuration; the paper's headline is the
+U-shaped TK curve with larger optimal K at larger gamma, and SS <= NICE."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.sppm import (
+    balanced_blocks, block_sampling, nice_sampling, sigma_star_nice,
+    sigma_star_stratified, solve_erm, sppm_as, stratified_sampling,
+    _client_grads_at)
+from repro.data.federated import make_logreg_clients
+
+EPS = 1e-3
+KS = (1, 2, 4, 8, 16)
+
+
+def run():
+    prob = make_logreg_clients(n_clients=20, m=60, d=16, mu=0.1, hetero=0.1, seed=3)
+    x_star = solve_erm(prob)
+    rows = []
+
+    # --- Fig 5.1/5.2: TK vs K for several gammas (nice sampling, GD prox)
+    for gamma in (5.0, 50.0, 500.0):
+        t0 = time.perf_counter()
+        best = (None, np.inf)
+        curve = []
+        for K in KS:
+            draw, p = nice_sampling(np.random.default_rng(5), prob.n_clients, 8)
+            r = sppm_as(prob, x_star, draw, p, gamma, K, T=300, solver="gd",
+                        eps=EPS, c_global=0.0, seed=0)
+            cost = r.total_cost if r.total_cost is not None else np.inf
+            curve.append(f"K{K}:{cost if np.isfinite(cost) else 'inf'}")
+            if cost < best[1]:
+                best = (K, cost)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"sppm_fig5.1/gamma={gamma}", us,
+                     f"bestK={best[0]};cost={best[1]};curve=" + "|".join(curve)))
+
+    # --- LocalGD (FedAvg-like) baseline: K local GD steps, cost = K*T as well
+    t0 = time.perf_counter()
+    best = (None, np.inf)
+    for K in KS:
+        draw, p = nice_sampling(np.random.default_rng(5), prob.n_clients, 8)
+        # gamma -> infinity makes prox_gd a pure local-GD step sequence
+        r = sppm_as(prob, x_star, draw, p, 1e8, K, T=300, solver="gd",
+                    eps=EPS, c_global=0.0, seed=0)
+        cost = r.total_cost if r.total_cost is not None else np.inf
+        if cost < best[1]:
+            best = (K, cost)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("sppm_fig5.2/localgd_baseline", us, f"bestK={best[0]};cost={best[1]}"))
+
+    # --- Fig 5.3: sampling comparison at fixed budget
+    gi = _client_grads_at(prob, x_star)
+    blocks = balanced_blocks(gi, 8)
+    t0 = time.perf_counter()
+    res = {}
+    for name, (draw, p) in {
+        "nice": nice_sampling(np.random.default_rng(5), prob.n_clients, 8),
+        "stratified": stratified_sampling(np.random.default_rng(2), blocks),
+        "block": block_sampling(np.random.default_rng(2), blocks),
+    }.items():
+        r = sppm_as(prob, x_star, draw, p, gamma=5.0, K=8, T=200, solver="newton", seed=0)
+        res[name] = float(r.errors[-50:].mean())
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("sppm_fig5.3/sampling", us,
+                 ";".join(f"{k}={v:.2e}" for k, v in res.items())))
+
+    s_nice, _ = sigma_star_nice(prob, x_star, tau=8)
+    s_ss = sigma_star_stratified(prob, x_star, blocks)
+    rows.append(("sppm_lemma5.3.4/sigma2", 0.0,
+                 f"nice={s_nice:.3e};stratified={s_ss:.3e};ss_le_nice={s_ss <= s_nice}"))
+
+    # --- Fig 5.6: hierarchical FL, c1=0.05 c2=1
+    t0 = time.perf_counter()
+    best = (None, np.inf)
+    for K in KS:
+        draw, p = nice_sampling(np.random.default_rng(5), prob.n_clients, 8)
+        r = sppm_as(prob, x_star, draw, p, gamma=50.0, K=K, T=300, solver="gd",
+                    eps=EPS, c_local=0.05, c_global=1.0, seed=0)
+        cost = r.total_cost if r.total_cost is not None else np.inf
+        if cost < best[1]:
+            best = (K, cost)
+    # FedAvg reference: K=1, same costs
+    draw, p = nice_sampling(np.random.default_rng(5), prob.n_clients, 8)
+    ref = sppm_as(prob, x_star, draw, p, gamma=50.0, K=1, T=300, solver="gd",
+                  eps=EPS, c_local=0.05, c_global=1.0, seed=0)
+    refc = ref.total_cost if ref.total_cost is not None else np.inf
+    us = (time.perf_counter() - t0) * 1e6
+    save = (1 - best[1] / refc) * 100 if np.isfinite(refc) and np.isfinite(best[1]) else float("nan")
+    rows.append(("sppm_fig5.6/hierarchical", us,
+                 f"bestK={best[0]};cost={best[1]:.2f};fedavg={refc};saving={save:.1f}%"))
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

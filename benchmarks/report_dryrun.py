@@ -1,0 +1,67 @@
+"""Render results/dryrun/*.json into the §Dry-run markdown table.
+
+    PYTHONPATH=src python -m benchmarks.report_dryrun [--dir results/dryrun]
+"""
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.2f}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--out", default="results/dryrun_table.md")
+    args = ap.parse_args()
+
+    recs = defaultdict(dict)
+    for f in glob.glob(os.path.join(args.dir, "*.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"])][r["mesh"]] = r
+
+    lines = [
+        "| arch | shape | 16x16 | args GB/chip | temp GB/chip | HLO GF/chip (raw) | coll MB/chip | 2x16x16 |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    ok = skipped = err = 0
+    for (arch, shape) in sorted(recs, key=lambda k: (k[0], SHAPES.index(k[1]))):
+        sp = recs[(arch, shape)].get("16x16", {})
+        mp = recs[(arch, shape)].get("2x16x16", {})
+        st = sp.get("status", "?")
+        if st == "skipped":
+            lines.append(f"| {arch} | {shape} | skipped | - | - | - | - | skipped |")
+            skipped += 1
+            continue
+        if st == "error":
+            lines.append(f"| {arch} | {shape} | ERROR | - | - | - | - | {mp.get('status','?')} |")
+            err += 1
+            continue
+        ok += 1
+        mem = sp.get("memory", {})
+        cost = sp.get("cost", {})
+        coll = sp.get("collectives", {})
+        lines.append(
+            f"| {arch} | {shape} | ok ({sp.get('compile_s','?')}s) "
+            f"| {fmt_bytes(mem.get('argument_size_in_bytes'))} "
+            f"| {fmt_bytes(mem.get('temp_size_in_bytes'))} "
+            f"| {cost.get('flops', 0)/1e9:.0f} "
+            f"| {coll.get('total_bytes', 0)/1e6:.1f} "
+            f"| {mp.get('status','?')} ({mp.get('compile_s','?')}s) |")
+    summary = f"\n{ok} ok, {skipped} skipped, {err} error of {ok+skipped+err} (arch,shape) combos.\n"
+    out = "\n".join(lines) + summary
+    with open(args.out, "w") as f:
+        f.write(out)
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

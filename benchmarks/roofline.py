@@ -1,0 +1,105 @@
+"""§Roofline: derive compute / memory / collective terms per (arch x shape).
+
+Reads the dry-run sweep artifacts (results/dryrun/*.json) for memory proof +
+raw costs, re-derives loop-corrected flops/bytes/collective-bytes via
+launch/costing.py (three small lowerings per combo), and emits the roofline
+table: all three terms in seconds, the dominant term, MODEL_FLOPS/HLO_FLOPS
+utility ratio, and an auto-generated what-would-help note.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+cost_analysis numbers are per-device post-SPMD, so terms are per-chip already.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--out results/roofline.json]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import glob
+import json
+import time
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def analyze_combo(arch: str, shape: str, sync: str = "dense"):
+    import jax  # after XLA_FLAGS
+    from repro.configs.base import get_config
+    from repro.launch.costing import corrected_costs, model_flops
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=False)
+    t0 = time.time()
+    cc = corrected_costs(cfg, mesh, shape, sync_mode=sync)
+    mf = model_flops(cfg, shape)
+    c = cc["corrected"]
+    n_chips = 256
+    terms = {
+        "compute_s": c.get("flops", 0.0) / PEAK_FLOPS,
+        "memory_s": c.get("bytes", 0.0) / HBM_BW,
+        "collective_s": c.get("coll_total", 0.0) / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    hlo_flops_global = c.get("flops", 0.0) * n_chips
+    ratio = mf["model_flops"] / hlo_flops_global if hlo_flops_global else float("nan")
+    advice = {
+        "compute_s": "compute-bound: raise arithmetic efficiency (fuse, reduce remat recompute, larger per-chip tiles)",
+        "memory_s": "HBM-bound: cut bytes/step (activation dtype, fusion, avoid materialized intermediates, bigger arithmetic intensity)",
+        "collective_s": "collective-bound: cut wire bytes (compressed sync / hier mode, overlap collectives with compute, reshard to reduce gather volume)",
+    }[dominant]
+    return {
+        "arch": arch, "shape": shape, "sync": sync,
+        "terms_s": terms, "dominant": dominant,
+        "model_flops": mf["model_flops"],
+        "hlo_flops_per_chip": c.get("flops", 0.0),
+        "useful_ratio": ratio,
+        "collectives_by_kind": {k[5:]: v for k, v in c.items() if k.startswith("coll_") and k != "coll_total"},
+        "advice": advice,
+        "analysis_s": round(time.time() - t0, 1),
+        "variants": cc["variants"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--sync", default="dense")
+    args = ap.parse_args()
+
+    combos = []
+    for f in sorted(glob.glob(os.path.join(args.dryrun_dir, "*__sp__dense.json"))):
+        rec = json.load(open(f))
+        if rec.get("status") != "ok":
+            continue
+        if args.arch and rec["arch"] != args.arch:
+            continue
+        if args.shape and rec["shape"] != args.shape:
+            continue
+        combos.append((rec["arch"], rec["shape"]))
+
+    rows = []
+    for arch, shape in combos:
+        print(f"[roofline] {arch} x {shape}", flush=True)
+        try:
+            rows.append(analyze_combo(arch, shape, args.sync))
+            t = rows[-1]["terms_s"]
+            print(f"  compute {t['compute_s']*1e3:.2f}ms  memory {t['memory_s']*1e3:.2f}ms  "
+                  f"collective {t['collective_s']*1e3:.2f}ms  -> {rows[-1]['dominant']}  "
+                  f"useful={rows[-1]['useful_ratio']:.2f}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"  ERROR {type(e).__name__}: {e}", flush=True)
+            rows.append({"arch": arch, "shape": shape, "error": str(e)[:500]})
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"wrote {args.out} ({len(rows)} combos)")
+
+
+if __name__ == "__main__":
+    main()

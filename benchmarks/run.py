@@ -1,0 +1,39 @@
+"""Benchmark entry: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  The §Roofline harness
+(benchmarks/roofline.py) and the multi-pod dry-run (repro.launch.dryrun) are
+separate long-running entries — this file covers the paper-table benchmarks.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import bench_efbv, bench_fedp3, bench_kernels
+    from benchmarks import bench_scafflix, bench_scafflix_nn, bench_sppm
+    from benchmarks import bench_symwanda
+    from benchmarks.common import emit
+
+    modules = [
+        ("efbv(Fig2.2)", bench_efbv),
+        ("scafflix(Fig3.1/3.3)", bench_scafflix),
+        ("scafflix_nn(Fig3.2)", bench_scafflix_nn),
+        ("fedp3(Fig4.2/4.4/Tab4.2)", bench_fedp3),
+        ("sppm(Fig5.1-5.6)", bench_sppm),
+        ("symwanda(Tab6.3-6.6)", bench_symwanda),
+        ("kernels", bench_kernels),
+    ]
+    print("name,us_per_call,derived")
+    for label, mod in modules:
+        t0 = time.time()
+        try:
+            emit(mod.run())
+        except Exception as e:  # noqa: BLE001 — keep the suite going
+            print(f"{label}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
+        print(f"# {label} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

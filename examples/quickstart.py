@@ -1,0 +1,69 @@
+"""Quickstart: train a tiny assigned-arch model with EF-BV compressed
+gradient sync, then decode from it.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch h2o-danube-1.8b]
+
+Everything runs on CPU in ~2 minutes: the reduced config of the chosen
+architecture, the synthetic Markov corpus, the EF-BV sync mode with the int8
+quantization compressor (4x fewer bits on the wire than fp32 all-reduce,
+modeled bits reported), and a short greedy decode at the end.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import SyncConfig, TrainConfig
+from repro.core.distributed import bits_per_round
+from repro.data.synthetic import SyntheticLMDataset, lm_batch_iterator
+from repro.models import decode_step, prefill
+from repro.training.loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--sync", default="efbv", choices=["dense", "efbv", "ef21", "local"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    print(f"arch={args.arch} (reduced: {cfg.num_layers}L d={cfg.d_model} "
+          f"v={cfg.vocab_size}, {cfg.param_count()/1e6:.2f}M params)")
+
+    tc = TrainConfig(model=cfg, seq_len=64, global_batch=8, lr=3e-3,
+                     warmup_steps=10, total_steps=args.steps,
+                     sync=SyncConfig(mode=args.sync, compressor="qsgd", quant_bits=8))
+    ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, length=60000, seed=0)
+    it = lm_batch_iterator(ds, 8, 64, seed=1)
+
+    n_groups = 2 if args.sync != "dense" else 1
+    state, hist = train(cfg, tc, it, n_groups=n_groups, n_pods=2,
+                        steps=args.steps, log_every=25)
+    print(f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+    bits = bits_per_round(tc.sync, cfg.param_count())
+    print(f"modeled sync payload: {bits/8e6:.2f} MB/round "
+          f"(dense fp32 would be {cfg.param_count()*4/1e6:.2f} MB)")
+
+    # decode a continuation
+    params = state.params
+    if args.sync in ("local", "hier"):
+        params = jax.tree_util.tree_map(lambda p: p[0], params)
+    prompt = jnp.asarray(ds.tokens[:32][None].astype(np.int32))
+    _, cache = prefill(params, cfg, {"tokens": prompt}, cache_len=64)
+    tok = prompt[:, -1:]
+    out = []
+    for _ in range(16):
+        logits, cache = decode_step(params, cfg, tok, cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    print("greedy continuation token ids:", out)
+
+
+if __name__ == "__main__":
+    main()

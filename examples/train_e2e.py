@@ -1,0 +1,78 @@
+"""End-to-end training driver: a ~25M-param qwen-family model for a few
+hundred steps on the synthetic corpus, with checkpointing, eval and the
+paper's compressed-sync option.
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 300 [--sync efbv]
+
+(~25M is what a few hundred steps finish in on this 1-core CPU container in
+reasonable time; on real hardware the same driver scales to the full configs
+— the multi-pod dry-run proves those lower. Pass --d-model 512 --layers 8
+for the ~100M variant if you have the budget.)
+"""
+import argparse
+import sys
+from dataclasses import replace
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import SyncConfig, TrainConfig
+from repro.data.synthetic import SyntheticLMDataset, lm_batch_iterator
+from repro.models import forward_train
+from repro.models.layers import cross_entropy_loss
+from repro.training.loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--sync", default="dense",
+                    choices=["dense", "efbv", "ef21", "local", "hier"])
+    ap.add_argument("--ckpt", default="results/e2e_ckpt")
+    args = ap.parse_args()
+
+    base = get_config("qwen1.5-4b")
+    cfg = replace(
+        base, num_layers=args.layers, d_model=args.d_model,
+        num_heads=max(4, args.d_model // 64), num_kv_heads=max(2, args.d_model // 128),
+        head_dim=64, d_ff=args.d_model * 4, vocab_size=8192, dtype="float32",
+    )
+    print(f"model: {cfg.num_layers}L d={cfg.d_model} v={cfg.vocab_size} "
+          f"-> {cfg.param_count()/1e6:.1f}M params, sync={args.sync}")
+
+    ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, length=200000, seed=0)
+    it = lm_batch_iterator(ds, args.batch, args.seq, seed=1)
+    tc = TrainConfig(model=cfg, seq_len=args.seq, global_batch=args.batch,
+                     lr=3e-3, warmup_steps=20, total_steps=args.steps,
+                     sync=SyncConfig(mode=args.sync, compressor="qsgd",
+                                     sync_period=4))
+    n_groups = 2 if args.sync != "dense" else 1
+    state, hist = train(cfg, tc, it, n_groups=n_groups, n_pods=2,
+                        steps=args.steps, ckpt_path=args.ckpt, log_every=20)
+
+    # held-out eval
+    eval_it = lm_batch_iterator(ds, args.batch, args.seq, seed=999)
+    params = state.params
+    if args.sync in ("local", "hier"):
+        params = jax.tree_util.tree_map(lambda p: p[0], params)
+    losses = []
+    for _ in range(5):
+        b = next(eval_it)
+        eb = {"tokens": jnp.asarray(b["tokens"][:, :-1]),
+              "targets": jnp.asarray(b["tokens"][:, 1:])}
+        lg, _ = forward_train(params, cfg, eb)
+        losses.append(float(cross_entropy_loss(lg, eb["targets"])))
+    print(f"train loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}; "
+          f"eval loss {np.mean(losses):.3f} (uniform would be {np.log(cfg.vocab_size):.3f})")
+
+
+if __name__ == "__main__":
+    main()

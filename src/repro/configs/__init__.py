@@ -1,0 +1,12 @@
+from repro.configs.base import (
+    ModelConfig,
+    MoEConfig,
+    MambaConfig,
+    SyncConfig,
+    TrainConfig,
+    InputShape,
+    INPUT_SHAPES,
+    get_config,
+    list_configs,
+    register,
+)

@@ -1,0 +1,297 @@
+"""Config system: dataclass configs + architecture registry.
+
+Every assigned architecture registers a ``ModelConfig`` here via its
+``src/repro/configs/<arch>.py`` module.  Configs are plain frozen dataclasses
+so they hash, print, and diff cleanly; ``reduced()`` produces the CPU smoke
+variant (2 layers, d_model<=512, <=4 experts) required by the deliverables.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Sequence
+
+# ---------------------------------------------------------------------------
+# Layer kinds used by the interleave schedule (jamba, llama4 iRoPE, ...)
+# ---------------------------------------------------------------------------
+ATTN_GLOBAL = "attn"          # full causal attention
+ATTN_SWA = "attn_swa"         # sliding-window attention
+ATTN_CHUNK = "attn_chunk"     # chunked-local attention (llama4 iRoPE local)
+MAMBA = "mamba"               # Mamba2 SSD block
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 16
+    top_k: int = 1
+    capacity_factor: float = 1.25
+    # dbrx-style fine-grained experts keep d_ff per expert small; llama4 adds a
+    # shared expert alongside the routed ones.
+    shared_expert: bool = False
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk_size: int = 256
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | vlm | audio | ssm | hybrid
+    citation: str
+    num_layers: int
+    d_model: int
+    num_heads: int                    # query heads (0 for attention-free)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    # --- attention options ---
+    qkv_bias: bool = False            # qwen1.5
+    qk_norm: bool = False             # chameleon
+    rope_theta: float = 10000.0
+    sliding_window: int = 0           # >0 => SWA (h2o-danube)
+    attn_chunk: int = 0               # >0 => chunked-local attention (llama4)
+    # layer schedule: None => all ATTN_GLOBAL (or per-arch default); else a
+    # pattern tiled over num_layers, e.g. ("mamba",)*7+("attn",) for jamba.
+    layer_pattern: Optional[Sequence[str]] = None
+    # --- mlp ---
+    mlp_act: str = "silu"             # silu (SwiGLU) | relu2 (nemotron squared-ReLU) | gelu
+    mlp_gated: bool = True
+    # --- mixture of experts ---
+    moe: Optional[MoEConfig] = None
+    moe_every: int = 1                # apply MoE MLP every k-th layer (jamba: 2)
+    # --- ssm ---
+    mamba: Optional[MambaConfig] = None
+    # --- encoder/decoder (seamless) ---
+    enc_layers: int = 0               # >0 => encoder-decoder
+    enc_d_model: int = 0
+    cross_attn: bool = False
+    # --- multimodal early-fusion stub ---
+    vision_tokens: int = 0            # llama4: projected patch embeddings count
+    audio_frontend: bool = False      # seamless: frame embeddings replace src tokens
+    # --- misc ---
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    # long_500k eligibility: sub-quadratic decode memory (ssm / swa / chunked).
+    # Set by each config; dryrun consults this.
+    supports_long_context: bool = False
+
+    # ----- derived -----
+    def padded_vocab(self, multiple: int = 16) -> int:
+        """Vocab rounded up so the logits dim shards over the model axis
+        (seamless 256206 / mamba2 50280 are not 16-divisible; unsharded f32
+        logits at train_4k cost 67 GB/chip). Dead rows are masked in the CE."""
+        return -(-self.vocab_size // multiple) * multiple
+
+    def layer_kinds(self) -> tuple:
+        if self.layer_pattern is None:
+            kind = ATTN_GLOBAL
+            if self.sliding_window > 0:
+                kind = ATTN_SWA
+            elif self.attn_chunk > 0:
+                kind = ATTN_CHUNK
+            return (kind,) * self.num_layers
+        pat = tuple(self.layer_pattern)
+        reps = -(-self.num_layers // len(pat))
+        return (pat * reps)[: self.num_layers]
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks), used for 6ND."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab_size
+        n_attn = sum(1 for k in self.layer_kinds() if k.startswith("attn"))
+        n_mamba = sum(1 for k in self.layer_kinds() if k == MAMBA)
+        p = v * d  # embed
+        if not self.tie_embeddings:
+            p += v * d
+        # attention
+        q = self.num_heads * self.head_dim
+        kv = self.num_kv_heads * self.head_dim
+        attn_p = d * q + 2 * d * kv + q * d
+        if self.qkv_bias:
+            attn_p += q + 2 * kv
+        p += n_attn * attn_p
+        # mamba blocks
+        if self.mamba is not None:
+            di = self.mamba.expand * d
+            nheads = di // self.mamba.head_dim
+            # in_proj produces [z, x, B, C, dt]
+            conv_dim = di + 2 * self.mamba.n_groups * self.mamba.d_state
+            in_dim = 2 * di + 2 * self.mamba.n_groups * self.mamba.d_state + nheads
+            mamba_p = d * in_dim + conv_dim * self.mamba.d_conv + di * d + nheads * 2 + di
+            p += n_mamba * mamba_p
+        # mlp / moe
+        n_blocks = self.num_layers
+        mlp_p = (3 if self.mlp_gated else 2) * d * ff
+        if self.moe is not None:
+            n_moe = len([i for i in range(n_blocks) if (i % self.moe_every) == self.moe_every - 1])
+            n_dense = n_blocks - n_moe
+            p += n_dense * mlp_p
+            p += n_moe * (self.moe.num_experts * mlp_p + d * self.moe.num_experts)
+            if self.moe.shared_expert:
+                p += n_moe * mlp_p
+        else:
+            p += n_blocks * mlp_p
+        # norms (2 per block + final)
+        p += (2 * n_blocks + 1) * d
+        # encoder
+        if self.enc_layers:
+            de = self.enc_d_model or d
+            enc_attn = 4 * de * de
+            enc_mlp = (3 if self.mlp_gated else 2) * de * self.d_ff
+            p += self.enc_layers * (enc_attn + enc_mlp + 2 * de)
+            # cross-attention in decoder
+            p += self.num_layers * (4 * d * de + d)
+        return int(p)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top_k + shared only)."""
+        if self.moe is None:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        mlp_p = (3 if self.mlp_gated else 2) * d * ff
+        n_blocks = self.num_layers
+        n_moe = len([i for i in range(n_blocks) if (i % self.moe_every) == self.moe_every - 1])
+        inactive = n_moe * (self.moe.num_experts - self.moe.top_k) * mlp_p
+        return self.param_count() - int(inactive)
+
+    def reduced(self) -> "ModelConfig":
+        """CPU smoke-test variant: same family/topology, tiny dims."""
+        d = min(self.d_model, 128)
+        hd = 32
+        nh = max(2, min(4, self.num_heads)) if self.num_heads else 0
+        nkv = max(1, min(nh or 1, max(1, self.num_kv_heads * nh // max(1, self.num_heads))))
+        moe = None
+        if self.moe is not None:
+            moe = replace(self.moe, num_experts=4, top_k=min(self.moe.top_k, 2))
+        mamba = None
+        if self.mamba is not None:
+            mamba = replace(self.mamba, d_state=16, head_dim=16, chunk_size=8)
+        pat = None
+        if self.layer_pattern is not None:
+            # keep the interleave character but fit in 2 layers
+            pat = tuple(self.layer_pattern)[:2] if len(self.layer_pattern) >= 2 else self.layer_pattern
+        return replace(
+            self,
+            num_layers=2,
+            d_model=d,
+            num_heads=nh,
+            num_kv_heads=nkv,
+            head_dim=hd,
+            d_ff=min(self.d_ff, 4 * d) or 0,
+            vocab_size=min(self.vocab_size, 512),
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else 0,
+            attn_chunk=min(self.attn_chunk, 16) if self.attn_chunk else 0,
+            layer_pattern=pat,
+            moe=moe,
+            mamba=mamba,
+            enc_layers=min(self.enc_layers, 2) if self.enc_layers else 0,
+            enc_d_model=min(self.enc_d_model, d) if self.enc_d_model else 0,
+            vision_tokens=min(self.vision_tokens, 4) if self.vision_tokens else 0,
+            dtype="float32",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Training / sync configuration (the paper's knobs)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class SyncConfig:
+    """How gradients are synchronized across the data/pod mesh axes.
+
+    ``mode``:
+      dense    - plain all-reduce (the non-compressed baseline, FedAvg-ish)
+      efbv     - EF-BV compressed delta sync (Ch. 2); compressor taken from
+                 ``compressor``; lambda/nu from the eta/omega calculus
+      ef21     - EF-BV with nu=lambda (EF21 special case)
+      diana    - EF-BV with nu=1 (DIANA special case)
+      local    - Scafflix-style local training: sync every ``sync_period``
+                 steps (expected value of prob-p skipping), control variates on
+      hier     - Cohort-Squeeze hierarchical: dense intra-pod reduce every
+                 step, compressed inter-pod reduce every ``sync_period`` steps
+    """
+    mode: str = "dense"
+    compressor: str = "topk_block"    # see core/compressors.py registry
+    compress_ratio: float = 0.05      # k/d for sparsifiers; bits for quantizers
+    quant_bits: int = 8
+    sync_period: int = 1              # Scafflix E[1/p]
+    personalization_alpha: float = 1.0  # FLIX alpha (1 = no personalization)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    model: ModelConfig
+    seq_len: int = 4096
+    global_batch: int = 256
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    optimizer: str = "adamw"
+    grad_clip: float = 1.0
+    sync: SyncConfig = field(default_factory=SyncConfig)
+    remat: str = "dots"               # none | dots | full
+    grad_accum: int = 1               # microbatch accumulation steps
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_REGISTRY: dict = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> list:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def _ensure_loaded():
+    # import the per-arch modules lazily so `import repro` stays light
+    if _REGISTRY:
+        return
+    from repro.configs import archs  # noqa: F401  (registers everything)
+
+
+def asdict(cfg) -> dict:
+    return dataclasses.asdict(cfg)

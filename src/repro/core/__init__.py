@@ -1,0 +1,11 @@
+"""The paper's primary contribution: communication-efficient distributed
+training via compression (EF-BV), local training + personalization (Scafflix),
+multi-round cohorts (SPPM-AS), federated pruning (FedP3) and post-training
+pruning (SymWanda), plus the TPU-mesh runtime integration (distributed)."""
+from repro.core import compressors
+from repro.core import distributed
+from repro.core import ef_bv
+from repro.core import fedp3
+from repro.core import scafflix
+from repro.core import sppm
+from repro.core import symwanda

@@ -1,0 +1,132 @@
+"""Scafflix: explicit personalization + accelerated local training (Ch. 3).
+
+Implements Algorithm 4 verbatim on the (FLIX) objective
+    min_x  (1/n) sum_i f_i( alpha_i x + (1-alpha_i) x_i* ),
+where x_i* = argmin f_i is each client's locally-optimal model.
+
+Per round t (prob-p communication):
+    xt_i   = alpha_i x_i + (1-alpha_i) x_i*          # personalized estimate
+    g_i    = (stochastic) grad f_i(xt_i)
+    xh_i   = x_i - (gamma_i/alpha_i) (g_i - h_i)     # local step
+    w.p. p:  xbar = (gamma/n) sum_j (alpha_j^2/gamma_j) xh_j  (server)
+             x_i <- xbar;  h_i += (p alpha_i / gamma_i)(xbar - xh_i)
+    else:    x_i <- xh_i
+with gamma = ( (1/n) sum alpha_i^2 / gamma_i )^{-1}.
+
+``i-Scaffnew`` is the alpha_i = 1 special case (Appendix B.1), and vanilla
+Scaffnew additionally forces a shared stepsize.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ScafflixState(NamedTuple):
+    x: jax.Array        # (n, d) per-client iterates
+    h: jax.Array        # (n, d) control variates (sum_i h_i = 0 invariant)
+    x_star: jax.Array   # (n, d) local optima (personalization anchors)
+
+
+def scafflix_init(x0: jax.Array, n: int, x_star: jax.Array) -> ScafflixState:
+    d = x0.shape[0]
+    return ScafflixState(
+        x=jnp.tile(x0[None], (n, 1)),
+        h=jnp.zeros((n, d), x0.dtype),
+        x_star=x_star,
+    )
+
+
+def scafflix_round(key, state: ScafflixState, grad_fn: Callable, p: float,
+                   gammas: jax.Array, alphas: jax.Array):
+    """One Scafflix round. grad_fn(xt: (n,d)) -> (n,d) per-client gradients
+    evaluated at the personalized points. Returns (new_state, communicated)."""
+    n = state.x.shape[0]
+    xt = alphas[:, None] * state.x + (1 - alphas[:, None]) * state.x_star
+    g = grad_fn(xt)
+    xh = state.x - (gammas / alphas)[:, None] * (g - state.h)
+
+    theta = jax.random.bernoulli(key, p)
+    gamma_srv = 1.0 / jnp.mean(alphas**2 / gammas)
+    w = (alphas**2 / gammas)[:, None]
+    xbar = gamma_srv * jnp.mean(w * xh, axis=0)
+
+    x_comm = jnp.tile(xbar[None], (n, 1))
+    h_comm = state.h + (p * alphas / gammas)[:, None] * (xbar[None] - xh)
+
+    new_x = jnp.where(theta, x_comm, xh)
+    new_h = jnp.where(theta, h_comm, state.h)
+    return ScafflixState(x=new_x, h=new_h, x_star=state.x_star), theta
+
+
+def scafflix_run(key, state: ScafflixState, grad_fn, p: float, gammas, alphas,
+                 rounds: int, eval_fn=None):
+    """Returns (final state, per-round (metric, communicated) trace)."""
+
+    def body(st, k):
+        st, comm = scafflix_round(k, st, grad_fn, p, gammas, alphas)
+        m = eval_fn(st) if eval_fn is not None else jnp.zeros(())
+        return st, (m, comm)
+
+    keys = jax.random.split(key, rounds)
+    state, trace = jax.lax.scan(body, state, keys)
+    return state, trace
+
+
+# ---------------------------------------------------------------------------
+# FLIX helpers on the federated logreg problem (Ch. 3.3.1 experiments)
+# ---------------------------------------------------------------------------
+def flix_objective(x, A, b, mu, alphas, x_star):
+    """f~(x) = (1/n) sum_i f_i(alpha_i x + (1-alpha_i) x_i*)."""
+    xt = alphas[:, None] * x[None] + (1 - alphas[:, None]) * x_star  # (n,d)
+    z = jnp.einsum("nmd,nd->nm", A, xt)
+    loss = jnp.mean(jnp.log1p(jnp.exp(-b * z)), axis=1) + 0.5 * mu * jnp.sum(xt**2, axis=1)
+    return jnp.mean(loss)
+
+
+def logreg_grads(xt, A, b, mu):
+    """Per-client logreg gradients at per-client points xt (n,d)."""
+    z = jnp.einsum("nmd,nd->nm", A, xt)
+    s = -b * jax.nn.sigmoid(-b * z)           # d/dz log(1+exp(-bz))
+    g = jnp.einsum("nm,nmd->nd", s, A) / A.shape[1]
+    return g + mu * xt
+
+
+def local_optimum(A_i, b_i, mu, steps: int = 500, tol: float = 1e-10):
+    """x_i* = argmin f_i via Newton (logreg Hessian is closed-form)."""
+    m, d = A_i.shape
+
+    def grad_hess(x):
+        z = A_i @ x
+        sig = jax.nn.sigmoid(-b_i * z)
+        g = (A_i.T @ (-b_i * sig)) / m + mu * x
+        w = sig * (1 - sig)
+        H = (A_i.T * w) @ A_i / m + mu * jnp.eye(d)
+        return g, H
+
+    def body(carry, _):
+        x, done = carry
+        g, H = grad_hess(x)
+        step = jnp.linalg.solve(H, g)
+        new_x = jnp.where(done, x, x - step)
+        done = done | (jnp.linalg.norm(g) < tol)
+        return (new_x, done), None
+
+    (x, _), _ = jax.lax.scan(body, (jnp.zeros(d), jnp.asarray(False)), None, length=steps)
+    return x
+
+
+def flix_optimum(A, b, mu, alphas, x_star, steps: int = 2000, lr: float = None):
+    """Solve (FLIX) to high precision with GD (convex, smooth)."""
+    n, m, d = A.shape
+    L = jnp.max(jnp.sum(A**2, axis=(1, 2)) / (4 * m)) + mu
+    lr = (1.0 / L) if lr is None else lr
+
+    def body(x, _):
+        g = jax.grad(flix_objective)(x, A, b, mu, alphas, x_star)
+        return x - lr * g, None
+
+    x, _ = jax.lax.scan(body, jnp.zeros(d), None, length=steps)
+    return x

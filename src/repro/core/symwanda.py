@@ -1,0 +1,196 @@
+"""SymWanda: symmetric post-training pruning + R^2-DSnoT (Ch. 6).
+
+Scores for pruning a weight matrix W (out = X @ W, X: (tokens, d_in)):
+
+  magnitude   S_ij = |W_ij|
+  wanda       S_ij = |W_ij| * ||X_:i||_2          (input-activation aware)
+  ria         S_ij = (|W_ij|/sum_k|W_kj| + |W_ij|/sum_k|W_ik|) * ||X_:i||^alpha
+              (relative importance x activation, Zhang et al. 2024)
+  symwanda    beta * wanda-term + (1-beta) * output-side term
+              |W_ij| * ||Y_j:||, the symmetric objective of Sect. 6.3 that
+              recovers Wanda (beta=1) and the output-only variant (beta=0)
+  stochria    RIA computed from a row-subsampled calibration batch
+              (Sect. 6.4.1 "efficiency of stochastic methods")
+
+Masking: unstructured (global or per-output) and N:M structured (2:4).
+R^2-DSnoT: training-free prune-and-grow fine-tuning with a relative-importance
+regularized decision boundary (Sect. 6.3.6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Activation statistics from a calibration batch
+# ---------------------------------------------------------------------------
+def act_norms(X: jax.Array, p: float = 2.0) -> jax.Array:
+    """Per-input-channel lp norms ||X_:i||_p of calibration activations
+    (T, d_in).  The paper's App. E.3.2/E.3.3 sweeps p (1, 2, inf): p=2 is
+    Wanda's choice; p=1 weights dense moderate activations more, p=inf only
+    the peak."""
+    Xa = jnp.abs(X.astype(jnp.float32))
+    if p == float("inf"):
+        return jnp.max(Xa, axis=0)
+    return jnp.sum(Xa ** p, axis=0) ** (1.0 / p)
+
+
+# ---------------------------------------------------------------------------
+# Scores
+# ---------------------------------------------------------------------------
+def score_magnitude(W, X=None, **kw):
+    return jnp.abs(W)
+
+
+def score_wanda(W, X, p: float = 2.0, **kw):
+    return jnp.abs(W) * act_norms(X, p)[:, None]
+
+
+def score_ria(W, X, alpha: float = 0.5, p: float = 2.0, **kw):
+    aW = jnp.abs(W)
+    row_sum = jnp.sum(aW, axis=1, keepdims=True)   # sum over outputs for input i
+    col_sum = jnp.sum(aW, axis=0, keepdims=True)   # sum over inputs for output j
+    ri = aW / jnp.maximum(row_sum, 1e-12) + aW / jnp.maximum(col_sum, 1e-12)
+    return ri * (act_norms(X, p)[:, None] ** alpha)
+
+
+def score_symwanda(W, X, beta: float = 0.5, Y: Optional[jax.Array] = None, **kw):
+    """Symmetric objective: input-side ||X_:i|| and output-side ||Y_:j|| terms.
+    Y defaults to the layer's calibration output X @ W."""
+    inp = jnp.abs(W) * act_norms(X)[:, None]
+    Yc = X @ W if Y is None else Y
+    out = jnp.abs(W) * act_norms(Yc)[None, :]
+    # normalize each side so beta trades off comparable magnitudes
+    inp = inp / jnp.maximum(jnp.mean(inp), 1e-12)
+    out = out / jnp.maximum(jnp.mean(out), 1e-12)
+    return beta * inp + (1.0 - beta) * out
+
+
+def score_stochria(W, X, key=None, sample_frac: float = 0.1, alpha: float = 0.5, **kw):
+    T = X.shape[0]
+    k = max(1, int(sample_frac * T))
+    idx = jax.random.choice(key, T, shape=(k,), replace=False)
+    return score_ria(W, X[idx], alpha=alpha)
+
+
+SCORES = {
+    "magnitude": score_magnitude,
+    "wanda": score_wanda,
+    "ria": score_ria,
+    "symwanda": score_symwanda,
+    "stochria": score_stochria,
+}
+
+
+# ---------------------------------------------------------------------------
+# Masking
+# ---------------------------------------------------------------------------
+def mask_unstructured(S: jax.Array, sparsity: float, per_output: bool = True):
+    """Keep the top (1-sparsity) fraction by score; Wanda prunes per output."""
+    if per_output:
+        k = max(1, int(round((1 - sparsity) * S.shape[0])))
+        thresh = jax.lax.top_k(S.T, k)[0][:, -1]     # per column j
+        return (S >= thresh[None, :]).astype(S.dtype)
+    k = max(1, int(round((1 - sparsity) * S.size)))
+    thresh = jax.lax.top_k(S.reshape(-1), k)[0][-1]
+    return (S >= thresh).astype(S.dtype)
+
+
+def mask_nm(S: jax.Array, n: int = 2, m: int = 4):
+    """N:M structured: keep the n largest scores in every group of m along the
+    input dim (so each output column is N:M sparse along inputs)."""
+    d_in, d_out = S.shape
+    assert d_in % m == 0, (d_in, m)
+    grp = S.T.reshape(d_out, d_in // m, m)          # (out, groups, m)
+    thresh = jax.lax.top_k(grp, n)[0][..., -1:]
+    mask = (grp >= thresh).astype(S.dtype)
+    return mask.reshape(d_out, d_in).T
+
+
+def prune(W, X, method: str = "wanda", sparsity: float = 0.5,
+          structured_nm: Optional[tuple] = None, key=None, **score_kw):
+    """Returns (pruned W, mask)."""
+    S = SCORES[method](W, X, key=key, **score_kw)
+    if structured_nm is not None:
+        mask = mask_nm(S, *structured_nm)
+    else:
+        mask = mask_unstructured(S, sparsity)
+    return W * mask, mask
+
+
+# ---------------------------------------------------------------------------
+# Reconstruction metrics (the paper's minimization objective, Sect. 6.3)
+# ---------------------------------------------------------------------------
+def reconstruction_error(W, W_pruned, X) -> jax.Array:
+    """||X W - X W~||_F / ||X W||_F (input-side objective)."""
+    Y, Yp = X @ W, X @ W_pruned
+    return jnp.linalg.norm(Y - Yp) / jnp.maximum(jnp.linalg.norm(Y), 1e-12)
+
+
+def symmetric_error(W, W_pruned, X, Z) -> jax.Array:
+    """Symmetric objective ||X dW||_F + ||dW^T Z||_F (Z: output-side probe)."""
+    dW = W - W_pruned
+    return jnp.linalg.norm(X @ dW) + jnp.linalg.norm(dW.T @ Z)
+
+
+# ---------------------------------------------------------------------------
+# R^2-DSnoT: training-free prune-and-grow fine-tuning (Sect. 6.3.6)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DSnoTConfig:
+    iters: int = 20
+    swap_frac: float = 0.02      # fraction of each column swapped per iter
+    reg: float = 0.5             # relative-importance regularization strength
+    use_ria_boundary: bool = True  # R^2 variant; False = vanilla DSnoT
+
+
+def r2_dsnot(W, mask, X, cfg: DSnoTConfig = DSnoTConfig(), ria_alpha: float = 0.5):
+    """Iteratively swap pruned/kept weights to reduce per-output reconstruction
+    error, with the decision boundary regularized by relative importance.
+
+    Growth criterion: pruned weight whose reinstatement best cancels the
+    current output residual mean; pruning criterion: kept weight with least
+    (wanda + reg * RIA) importance.  Swaps are rank-matched per output column.
+    """
+    Xf = X.astype(jnp.float32)
+    Xn2 = jnp.sum(Xf**2, axis=0)                             # (d_in,) ||X_:i||^2
+    Wf = W.astype(jnp.float32)
+    ria = score_ria(W, X, alpha=ria_alpha)
+    ria = ria / jnp.maximum(jnp.mean(ria), 1e-12)
+    reg_term = cfg.reg * jnp.abs(Wf) * jnp.sqrt(Xn2)[:, None] * ria
+    d_out = W.shape[1]
+    cols = jnp.arange(d_out)
+
+    def one_iter(mask, _):
+        # residual R = X (W - W~); exact second-moment criterion:
+        # growing W_ij:  d||R||^2 = -2 W_ij (X^T R)_ij + W_ij^2 ||X_:i||^2
+        # pruning W_ij:  d||R|| ^2= +2 W_ij (X^T R)_ij + W_ij^2 ||X_:i||^2
+        R = Xf @ (Wf * (1 - mask))                           # (T, d_out)
+        XtR = Xf.T @ R                                       # (d_in, d_out)
+        quad = (Wf**2) * Xn2[:, None]
+        grow_delta = -2.0 * Wf * XtR + quad
+        grow_score = jnp.where(mask > 0, jnp.inf, grow_delta)   # want most negative
+        prune_delta = 2.0 * Wf * XtR + quad
+        if cfg.use_ria_boundary:
+            # R^2: regularize the decision boundary with relative importance
+            prune_delta = prune_delta + reg_term
+        prune_score = jnp.where(mask > 0, prune_delta, jnp.inf)  # want least harmful
+
+        grow_val, grow_idx = jax.lax.top_k(-grow_score.T, 1)    # per column
+        prune_val, prune_idx = jax.lax.top_k(-prune_score.T, 1)
+        grow_val, grow_idx = -grow_val[:, 0], grow_idx[:, 0]
+        prune_val, prune_idx = -prune_val[:, 0], prune_idx[:, 0]
+        net_gain = -(grow_val + prune_val)                      # >0 => swap reduces error
+        do = net_gain > 0
+        new_mask = mask.at[grow_idx, cols].set(
+            jnp.where(do, 1.0, mask[grow_idx, cols]))
+        new_mask = new_mask.at[prune_idx, cols].set(
+            jnp.where(do, 0.0, new_mask[prune_idx, cols]))
+        return new_mask, jnp.sum(do)
+
+    mask, swaps = jax.lax.scan(one_iter, mask, None, length=cfg.iters)
+    return W * mask, mask

@@ -1,0 +1,7 @@
+from repro.data.synthetic import SyntheticLMDataset, lm_batch_iterator
+from repro.data.federated import (
+    FederatedLogReg,
+    make_logreg_clients,
+    dirichlet_split,
+    classwise_split,
+)

@@ -1,0 +1,119 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These handle shape plumbing (flat -> tiled 2D with padding), compute the
+cheap global statistics the kernels consume (per-output thresholds, RIA
+row/col sums, symwanda normalizers), and expose drop-in backends:
+
+  * ``quantize_dequantize``  — compressor backend (core/compressors.qsgd)
+  * ``prune_nm``             — N:M backend for core/symwanda.mask_nm
+  * ``prune_scored``         — fused score+mask backend for core/symwanda.prune
+
+``interpret`` defaults to True (CPU validation container); on a real TPU
+deployment it is flipped off by the launcher.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import nm_prune as _nm
+from repro.kernels import quant8 as _q8
+from repro.kernels import wanda_score as _ws
+from repro.kernels import ref as _ref
+
+
+# ---------------------------------------------------------------------------
+# quant8
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("bits", "interpret"))
+def quantize_dequantize(x: jax.Array, key: jax.Array, bits: int = 8,
+                        interpret: bool = True) -> jax.Array:
+    """Blockwise absmax quantize-dequantize of an arbitrary-shape tensor."""
+    flat = x.reshape(-1)
+    d = flat.shape[0]
+    qb, tr = _q8.QBLOCK, _q8.TILE_ROWS
+    rows = -(-d // qb)
+    rows_pad = -(-rows // tr) * tr
+    padded = jnp.zeros((rows_pad * qb,), x.dtype).at[:d].set(flat).reshape(rows_pad, qb)
+    noise = jax.random.uniform(key, padded.shape, jnp.float32)
+    out = _q8.quant_dequant_2d(padded, noise, bits=bits, interpret=interpret)
+    return out.reshape(-1)[:d].reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# N:M prune
+# ---------------------------------------------------------------------------
+def _pad2d(a, tr, tc):
+    r, c = a.shape
+    rp, cp = -(-r // tr) * tr, -(-c // tc) * tc
+    if (rp, cp) == (r, c):
+        return a, r, c
+    return jnp.zeros((rp, cp), a.dtype).at[:r, :c].set(a), r, c
+
+
+@partial(jax.jit, static_argnames=("n", "m", "interpret"))
+def prune_nm(w: jax.Array, scores: jax.Array, n: int = 2, m: int = 4,
+             interpret: bool = True):
+    """(d_in, d_out) N:M prune by score; returns (pruned, mask)."""
+    wp, r, c = _pad2d(w, _nm.TILE_R, _nm.TILE_C)
+    # padded score rows must never win: fill with -inf
+    sp = jnp.full(wp.shape, -jnp.inf, jnp.float32).at[:r, :c].set(
+        scores.astype(jnp.float32))
+    out, mask = _nm.nm_prune_2d(wp, sp, n=n, m=m, interpret=interpret)
+    return out[:r, :c], mask[:r, :c]
+
+
+# ---------------------------------------------------------------------------
+# fused wanda/ria/symwanda prune
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("mode", "sparsity", "interpret"))
+def prune_scored(w: jax.Array, X: jax.Array, mode: str = "wanda",
+                 sparsity: float = 0.5, alpha: float = 0.5, beta: float = 0.5,
+                 interpret: bool = True):
+    """Fused score+mask prune of w (d_in, d_out) with calibration X (T, d_in).
+
+    Per-output thresholds come from a top-k over the (recomputed-on-the-fly)
+    score columns; the kernel then re-derives scores tile-local and masks.
+    Returns (pruned, mask)."""
+    d_in, d_out = w.shape
+    xnorm = jnp.sqrt(jnp.sum(X.astype(jnp.float32) ** 2, axis=0))
+    kw = dict(mode=mode, alpha=alpha, beta=beta)
+    rowsum = colsum = ynorm = None
+    mu_in = mu_out = 1.0
+    if mode == "ria":
+        aw = jnp.abs(w.astype(jnp.float32))
+        rowsum = jnp.sum(aw, axis=1)
+        colsum = jnp.sum(aw, axis=0)
+        scores = _ref.wanda_scores_ref(w, xnorm, mode, alpha)
+    elif mode == "symwanda":
+        Y = X @ w
+        ynorm = jnp.sqrt(jnp.sum(Y.astype(jnp.float32) ** 2, axis=0))
+        aw = jnp.abs(w.astype(jnp.float32))
+        mu_in = jnp.mean(aw * xnorm[:, None])
+        mu_out = jnp.mean(aw * ynorm[None, :])
+        scores = _ref.wanda_scores_ref(w, xnorm, mode, alpha, beta, ynorm, mu_in, mu_out)
+        rowsum, colsum = mu_in, mu_out  # packed as scalars for the kernel
+    else:
+        scores = _ref.wanda_scores_ref(w, xnorm, "wanda")
+    k = max(1, int(round((1 - sparsity) * d_in)))
+    tau = jax.lax.top_k(scores.T, k)[0][:, -1]  # per output column
+
+    wp, r, c = _pad2d(w, _ws.TILE_R, _ws.TILE_C)
+    xn_p = jnp.zeros((wp.shape[0],), jnp.float32).at[:r].set(xnorm)
+    tau_p = jnp.full((wp.shape[1],), jnp.inf, jnp.float32).at[:c].set(tau)
+    if mode == "ria":
+        rs_p = jnp.ones((wp.shape[0],), jnp.float32).at[:r].set(rowsum)
+        cs_p = jnp.ones((wp.shape[1],), jnp.float32).at[:c].set(colsum)
+        out, mask = _ws.wanda_prune_2d(wp, xn_p, tau_p, mode=mode, alpha=alpha,
+                                       rowsum=rs_p, colsum=cs_p, interpret=interpret)
+    elif mode == "symwanda":
+        yn_p = jnp.zeros((wp.shape[1],), jnp.float32).at[:c].set(ynorm)
+        out, mask = _ws.wanda_prune_2d(wp, xn_p, tau_p, mode=mode, beta=beta,
+                                       rowsum=mu_in, colsum=mu_out, ynorm=yn_p,
+                                       interpret=interpret)
+    else:
+        out, mask = _ws.wanda_prune_2d(wp, xn_p, tau_p, mode="wanda",
+                                       interpret=interpret)
+    return out[:r, :c], mask[:r, :c]

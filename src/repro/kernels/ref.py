@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_dequant_ref(x2d: jax.Array, noise2d: jax.Array, bits: int = 8) -> jax.Array:
+    """Blockwise absmax quantize-dequantize with stochastic rounding."""
+    s = 2 ** (bits - 1) - 1
+    x = x2d.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) / s
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.floor(x / scale + noise2d)
+    q = jnp.clip(q, -s, s)
+    return (q * scale).astype(x2d.dtype)
+
+
+def nm_prune_ref(w: jax.Array, scores: jax.Array, n: int = 2, m: int = 4):
+    """Keep n largest scores per group of m along d_in; first-index tie-break."""
+    d_in, d_out = w.shape
+    g = scores.astype(jnp.float32).reshape(d_in // m, m, d_out)
+    idx = jnp.arange(m).reshape(1, m, 1)
+    greater = jnp.sum(g[:, None, :, :] > g[:, :, None, :], axis=2).astype(jnp.float32)
+    ties = jnp.sum(
+        (g[:, None, :, :] == g[:, :, None, :]) & (idx[:, :, None] > idx[:, None, :]),
+        axis=2,
+    ).astype(jnp.float32)
+    # rank_i = #{k: s_k > s_i} + #{k < i: s_k == s_i}
+    rank = greater + ties
+    keep = (rank < n).astype(w.dtype).reshape(d_in, d_out)
+    return w * keep, keep
+
+
+def wanda_scores_ref(w, xnorm, mode="wanda", alpha=0.5, beta=0.5, ynorm=None,
+                     mu_in=1.0, mu_out=1.0):
+    aw = jnp.abs(w.astype(jnp.float32))
+    if mode == "wanda":
+        return aw * xnorm[:, None]
+    if mode == "ria":
+        rowsum = jnp.sum(aw, axis=1, keepdims=True)
+        colsum = jnp.sum(aw, axis=0, keepdims=True)
+        return (aw / rowsum + aw / colsum) * (xnorm[:, None] ** alpha)
+    if mode == "symwanda":
+        return beta * aw * xnorm[:, None] / mu_in + (1 - beta) * aw * ynorm[None, :] / mu_out
+    raise ValueError(mode)
+
+
+def wanda_prune_ref(w, xnorm, tau, mode="wanda", alpha=0.5, beta=0.5, ynorm=None,
+                    mu_in=1.0, mu_out=1.0):
+    s = wanda_scores_ref(w, xnorm, mode, alpha, beta, ynorm, mu_in, mu_out)
+    keep = (s >= tau[None, :]).astype(w.dtype)
+    return w * keep, keep

@@ -1,0 +1,71 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+against these.  Shapes come from the assigned INPUT_SHAPES table; the
+multimodal stubs follow the carve-out (precomputed frame/patch embeddings).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models import cache_specs, model_dtype
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    dtype = model_dtype(cfg)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.vision_tokens:
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.d_model), dtype)
+    if cfg.enc_layers:
+        # audio frames / source length: match target length for the assigned shape
+        specs["src_embeds"] = jax.ShapeDtypeStruct(
+            (B, S, cfg.enc_d_model or cfg.d_model), dtype)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    dtype = model_dtype(cfg)
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.vision_tokens:
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.d_model), dtype)
+    if cfg.enc_layers:
+        specs["src_embeds"] = jax.ShapeDtypeStruct(
+            (B, S, cfg.enc_d_model or cfg.d_model), dtype)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """One new token against a cache of shape.seq_len context."""
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = min(S, 32768) if cfg.enc_layers else 0
+    cache = cache_specs(cfg, B, S, enc_len=enc_len)
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "cache": cache,
+    }
+
+
+def input_specs(cfg: ModelConfig, shape) -> dict:
+    shape = INPUT_SHAPES[shape] if isinstance(shape, str) else shape
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)
+
+
+def skip_reason(cfg: ModelConfig, shape_name: str) -> str | None:
+    """Why a (arch, shape) combination is skipped, or None if it runs."""
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return (f"{cfg.name}: full quadratic attention — 500k decode KV cache "
+                "is out of scope per the assignment (no SWA/chunked/SSM variant)")
+    return None

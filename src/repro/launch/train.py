@@ -1,0 +1,63 @@
+"""Production training launcher.
+
+On a real TPU slice this is the entry each host runs (jax.distributed
+initializes from the TPU environment); on this CPU container it runs the same
+code over a host mesh, or — with ``--dry-run`` — delegates to the multi-pod
+dry-run for the requested arch/shape/sync.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-4b --dry-run
+  PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
+      --reduced --steps 100 --sync efbv
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--sync", default="dense",
+                    choices=["dense", "efbv", "ef21", "diana", "hier", "local"])
+    ap.add_argument("--compressor", default="qsgd")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile on the production mesh instead of running")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced config on local devices")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    if args.dry_run:
+        # the dry-run module must own the interpreter from the first import
+        os.execv(sys.executable, [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", args.arch, "--shape", args.shape,
+            "--multi-pod", "multi" if args.multi_pod else "single",
+            "--sync", args.sync, "--compressor", args.compressor,
+        ])
+
+    from repro.configs import get_config
+    from repro.configs.base import SyncConfig, TrainConfig
+    from repro.data.synthetic import SyntheticLMDataset, lm_batch_iterator
+    from repro.training.loop import train
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tc = TrainConfig(model=cfg, seq_len=args.seq, global_batch=args.batch,
+                     lr=3e-3, warmup_steps=10, total_steps=args.steps,
+                     sync=SyncConfig(mode=args.sync, compressor=args.compressor))
+    ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, length=100000, seed=0)
+    it = lm_batch_iterator(ds, args.batch, args.seq, seed=1)
+    n_groups = 2 if args.sync != "dense" else 1
+    train(cfg, tc, it, n_groups=n_groups, n_pods=2, steps=args.steps,
+          ckpt_path=args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

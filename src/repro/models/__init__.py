@@ -1,0 +1,10 @@
+from repro.models.transformer import (
+    init_params,
+    forward_train,
+    loss_fn,
+    prefill,
+    decode_step,
+    cache_specs,
+    period_info,
+    model_dtype,
+)

@@ -1,0 +1,131 @@
+"""Shared neural layers: norms, rotary embeddings, MLPs, embeddings.
+
+Functional style: ``init_*`` builds a param subtree (nested dict of arrays),
+``apply``-style functions consume (params, inputs).  Params use a leading
+stacking dim when scanned over layers (see transformer.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def init_rmsnorm(dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def l2norm(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Parameter-free L2 norm over the last dim (QK-norm, chameleon-style)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    return (x32 * jax.lax.rsqrt(jnp.mean(jnp.square(x32), -1, keepdims=True) + eps)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / squared-ReLU / plain)
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": _dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_out": _dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+    if gated:
+        p["w_gate"] = _dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def mlp(params: dict, x: jax.Array, act: str = "silu", gated: bool = True) -> jax.Array:
+    h = x @ params["w_in"]
+    if gated:
+        g = x @ params["w_gate"]
+        if act == "silu":
+            h = jax.nn.silu(g) * h
+        elif act == "gelu":
+            h = jax.nn.gelu(g) * h
+        else:
+            raise ValueError(act)
+    else:
+        if act == "relu2":  # nemotron squared-ReLU
+            h = jnp.square(jax.nn.relu(h))
+        elif act == "gelu":
+            h = jax.nn.gelu(h)
+        elif act == "silu":
+            h = jax.nn.silu(h)
+        else:
+            raise ValueError(act)
+    return h @ params["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def init_embed(key, vocab: int, d_model: int, dtype, tie: bool) -> dict:
+    ks = jax.random.split(key, 2)
+    p = {"tok": _dense_init(ks[0], (vocab, d_model), dtype, scale=0.02)}
+    if not tie:
+        p["unembed"] = _dense_init(ks[1], (d_model, vocab), dtype, scale=0.02)
+    return p
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def unembed(params: dict, x: jax.Array) -> jax.Array:
+    if "unembed" in params:
+        return x @ params["unembed"]
+    return x @ params["tok"].T
+
+
+def cross_entropy_loss(logits: jax.Array, targets: jax.Array, ignore: int = -1,
+                       valid_vocab: Optional[int] = None) -> jax.Array:
+    """Mean next-token CE in fp32. logits (..., V), targets (...,) int.
+    ``valid_vocab`` masks padded vocab rows out of the partition function."""
+    logits = logits.astype(jnp.float32)
+    if valid_vocab is not None and valid_vocab < logits.shape[-1]:
+        dead = jnp.arange(logits.shape[-1]) >= valid_vocab
+        logits = jnp.where(dead, -1e30, logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (targets != ignore).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

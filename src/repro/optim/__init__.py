@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    OptState,
+    adamw,
+    sgd,
+    make_optimizer,
+    clip_by_global_norm,
+)
+from repro.optim.schedules import cosine_schedule, linear_warmup, constant_schedule

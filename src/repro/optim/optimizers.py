@@ -1,0 +1,112 @@
+"""Optimizers as (init, update) pairs over pytrees — optax-style but local.
+
+States mirror param pytree structure leaf-for-leaf so the sharding rules that
+apply to a param apply verbatim to its optimizer moments (critical for the
+multi-pod dry-run: AdamW moments of a model-sharded weight stay model-sharded).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_map
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: object       # first moment (or momentum); zeros pytree for sgd w/o momentum
+    nu: object       # second moment; empty tuple for sgd
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, new_state)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    from repro.utils.tree import tree_norm
+
+    norm = tree_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return tree_map(lambda g: g * scale, grads), norm
+
+
+def adamw(
+    lr: Callable | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    mask: Optional[Callable] = None,
+) -> Optimizer:
+    """AdamW with decoupled weight decay.
+
+    ``mask(path-free param leaf) -> bool`` selects leaves that receive weight
+    decay (default: every leaf with ndim >= 2, i.e. matrices but not
+    norms/biases).
+    """
+    sched = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+    decay_mask = mask or (lambda p: p.ndim >= 2)
+
+    def init(params):
+        zeros = tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=zeros)
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = sched(step)
+        b1c = 1 - b1 ** step.astype(jnp.float32)
+        b2c = 1 - b2 ** step.astype(jnp.float32)
+
+        mu = tree_map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = tree_map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+
+        def upd(m, v, p):
+            mhat = m / b1c
+            vhat = v / b2c
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if decay_mask(p):
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        updates = tree_map(upd, mu, nu, params)
+        return updates, OptState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: Callable | float, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    sched = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        mu = tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params) if momentum else ()
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=())
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = sched(step)
+        if momentum:
+            mu = tree_map(lambda m, g: momentum * m + g.astype(jnp.float32), state.mu, grads)
+            eff = tree_map(lambda m, g: momentum * m + g.astype(jnp.float32), mu, grads) if nesterov else mu
+            updates = tree_map(lambda e, p: (-lr_t * e).astype(p.dtype), eff, params)
+            return updates, OptState(step=step, mu=mu, nu=())
+        updates = tree_map(lambda g, p: (-lr_t * g).astype(p.dtype), grads, params)
+        return updates, OptState(step=step, mu=(), nu=())
+
+    return Optimizer(init=init, update=update)
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "sgd":
+        return sgd(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def apply_updates(params, updates):
+    return tree_map(lambda p, u: p + u, params, updates)

@@ -1,0 +1,30 @@
+"""Learning-rate schedules (scalar step -> lr), pure jnp."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def sched(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return sched
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def sched(step):
+        frac = jnp.minimum(1.0, (step + 1) / max(1, warmup_steps))
+        return jnp.asarray(lr * frac, jnp.float32)
+
+    return sched
+
+
+def cosine_schedule(lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / max(1, warmup_steps))
+        prog = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.asarray(lr, jnp.float32) * warm * cos
+
+    return sched

@@ -1,0 +1,9 @@
+from repro.training.steps import (
+    TrainState,
+    init_train_state,
+    make_train_step,
+    make_prefill_step,
+    make_decode_step,
+)
+from repro.training.loop import train
+from repro.training.checkpoint import save_checkpoint, load_checkpoint

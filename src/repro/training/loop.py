@@ -1,0 +1,51 @@
+"""Host-side training loop: data feed, jit'd step, metrics, checkpoints."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import init_params
+from repro.training.checkpoint import save_checkpoint
+from repro.training.steps import TrainState, init_train_state, make_train_step
+from repro.utils.logging import get_logger
+
+log = get_logger("train")
+
+
+def train(cfg: ModelConfig, tc: TrainConfig, batches: Iterator[dict],
+          n_groups: int = 1, n_pods: int = 1, steps: Optional[int] = None,
+          ckpt_path: Optional[str] = None, log_every: int = 10):
+    """Single-host training entry (examples / e2e driver).  The multi-pod
+    launcher (launch/train.py) wraps the same step builders under a mesh."""
+    steps = steps or tc.total_steps
+    key = jax.random.PRNGKey(tc.seed)
+    key, kinit = jax.random.split(key)
+    params = init_params(kinit, cfg)
+    state = init_train_state(key, params, tc, n_groups, n_pods)
+    step_fn = jax.jit(make_train_step(cfg, tc, n_groups, n_pods))
+
+    history = []
+    t0 = time.time()
+    for step in range(steps):
+        batch = next(batches)
+        tokens = batch["tokens"]
+        model_batch = {"tokens": jnp.asarray(tokens[:, :-1]),
+                       "targets": jnp.asarray(tokens[:, 1:])}
+        for k, v in batch.items():
+            if k != "tokens":
+                model_batch[k] = jnp.asarray(v)
+        state, metrics = step_fn(state, model_batch)
+        history.append({k: float(v) for k, v in metrics.items()})
+        if step % log_every == 0 or step == steps - 1:
+            dt = time.time() - t0
+            log.info("step %4d loss %.4f grad_norm %.3f (%.2fs)",
+                     step, history[-1]["loss"], history[-1]["grad_norm"], dt)
+    if ckpt_path:
+        save_checkpoint(ckpt_path, state.params, step=steps)
+        log.info("saved checkpoint to %s", ckpt_path)
+    return state, history

@@ -1,0 +1,136 @@
+"""Continuous-batching serving loop.
+
+A slot-based scheduler over the framework's prefill/decode steps: requests
+arrive with ragged prompts, occupy fixed decode slots (the production
+decode_32k shape = 128 slots), finished slots are refilled from the queue
+without stalling the running batch.  The decode step itself is the jitted
+``decode_step`` the dry-run lowers at production scale; here it runs at
+reduced scale on CPU (examples/serve_decode.py drives it).
+
+Slot semantics: one shared cache of capacity ``max_len``; per-slot position
+offsets are handled by left-padding prompts into the slot at prefill time and
+masking finished slots. Prefill for a refill batches all newly admitted
+requests together (prefill and decode alternate — the standard
+continuous-batching compromise without paged attention).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (L,) int32
+    max_new: int = 32
+    stop_token: Optional[int] = None
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class ServeStats:
+    admitted: int = 0
+    completed: int = 0
+    decode_steps: int = 0
+    prefills: int = 0
+    tokens_out: int = 0
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batching over (prefill, decode_step)."""
+
+    def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 128):
+        from repro.models import decode_step, prefill
+
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, cfg, b, cache_len=max_len))
+        self._decode = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+        self.queue: List[Request] = []
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.cache = None
+        self.next_tok = np.zeros((n_slots, 1), np.int32)
+        self.stats = ServeStats()
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+        self.stats.admitted += 1
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is None or r.done]
+
+    def _admit(self) -> None:
+        """Fill free slots from the queue with one batched prefill.
+
+        All current slots are re-prefilled together (left-padded to a common
+        length) — cache capacity is shared, so a refill rebuilds the batch
+        cache; running requests keep their full context (prompt+generated)."""
+        free = self._free_slots()
+        if not free or not self.queue:
+            return
+        for i in free:
+            if not self.queue:
+                break
+            self.slots[i] = self.queue.pop(0)
+        live = [(i, r) for i, r in enumerate(self.slots) if r is not None and not r.done]
+        if not live:
+            return
+        ctxs = [np.concatenate([r.prompt, np.asarray(r.generated, np.int32)])
+                for _, r in live]
+        maxlen = max(len(c) for c in ctxs)
+        batch_tokens = np.zeros((self.n_slots, maxlen), np.int32)
+        for (i, r), c in zip(live, ctxs):
+            batch_tokens[i, maxlen - len(c):] = c
+        batch = {"tokens": jnp.asarray(batch_tokens)}
+        if self.cfg.enc_layers:
+            batch["src_embeds"] = jnp.zeros(
+                (self.n_slots, 8, self.cfg.enc_d_model or self.cfg.d_model))
+        if self.cfg.vision_tokens:
+            batch["vision_embeds"] = jnp.zeros(
+                (self.n_slots, self.cfg.vision_tokens, self.cfg.d_model))
+        logits, self.cache = self._prefill(self.params, batch)
+        self.next_tok = np.asarray(
+            jnp.argmax(logits[:, -1, :self.cfg.vocab_size], -1))[:, None].astype(np.int32)
+        self.stats.prefills += 1
+
+    # -- decode --------------------------------------------------------------
+    def step(self) -> int:
+        """One scheduler tick: admit if possible, then one decode step for all
+        live slots. Returns the number of live requests."""
+        if self._free_slots() and self.queue:
+            self._admit()
+        live = [i for i, r in enumerate(self.slots) if r is not None and not r.done]
+        if not live or self.cache is None:
+            return 0
+        logits, self.cache = self._decode(self.params, jnp.asarray(self.next_tok),
+                                          self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, -1, :self.cfg.vocab_size], -1))
+        self.stats.decode_steps += 1
+        for i in live:
+            r = self.slots[i]
+            tok = int(nxt[i])
+            r.generated.append(tok)
+            self.stats.tokens_out += 1
+            if (r.stop_token is not None and tok == r.stop_token) or \
+                    len(r.generated) >= r.max_new:
+                r.done = True
+                self.stats.completed += 1
+        self.next_tok = nxt[:, None].astype(np.int32)
+        return len([i for i in live if not self.slots[i].done])
+
+    def run(self, max_ticks: int = 1000) -> ServeStats:
+        for _ in range(max_ticks):
+            self.step()
+            if not self.queue and all(r is None or r.done for r in self.slots):
+                break
+        return self.stats

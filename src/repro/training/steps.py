@@ -1,0 +1,177 @@
+"""train/prefill/decode step builders — the functions the launcher jits.
+
+Three train-step flavors, keyed by SyncConfig.mode:
+
+  dense          params shared across all workers; global-batch loss; XLA's
+                 all-reduce does the (uncompressed) gradient sync. Baseline.
+  efbv/ef21/diana
+                 per-group gradients via vmap over a leading group axis
+                 (sharded over (pod, data)); EF-BV compressed-delta sync
+                 produces the shared gradient estimate (Ch. 2).
+  hier / local   per-group model replicas (leading axis sharded over 'pod'
+                 for hier, (pod, data) for local); local optimizer steps with
+                 EF21-compressed parameter sync every sync_period steps
+                 (Ch. 3 local training / Ch. 5 cohort squeeze on the fabric).
+
+All steps take and return sharded pytrees; the launcher supplies
+in_shardings/out_shardings from sharding/rules.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SyncConfig, TrainConfig
+from repro.core import distributed as dist
+from repro.sharding.context import constrain_grads
+from repro.models import loss_fn, prefill, decode_step as model_decode_step
+from repro.optim.optimizers import apply_updates, clip_by_global_norm, make_optimizer
+from repro.optim.schedules import cosine_schedule
+from repro.utils.tree import tree_map
+
+
+class TrainState(NamedTuple):
+    params: object
+    opt_state: object
+    sync_state: object   # dist.SyncState or None
+    key: jax.Array
+
+
+def _make_optimizer(tc: TrainConfig):
+    sched = cosine_schedule(tc.lr, tc.warmup_steps, tc.total_steps)
+    return make_optimizer(tc.optimizer, sched, weight_decay=tc.weight_decay)
+
+
+def init_train_state(key, params, tc: TrainConfig, n_groups: int, n_pods: int):
+    opt = _make_optimizer(tc)
+    mode = tc.sync.mode
+    if mode in ("hier", "local"):
+        G = n_pods if mode == "hier" else n_groups
+        params_g = tree_map(lambda p: jnp.broadcast_to(p[None], (G,) + p.shape), params)
+        opt_state = jax.vmap(opt.init)(params_g)
+        h_bar = tree_map(lambda p: p.astype(jnp.float32), params)
+        sync_state = dist.SyncState(h=(), h_bar=h_bar, step=jnp.zeros((), jnp.int32))
+        return TrainState(params_g, opt_state, sync_state, key)
+    opt_state = opt.init(params)
+    sync_state = (
+        dist.sync_state_init(params, n_groups, tc.sync, n_pods)
+        if mode != "dense" else None
+    )
+    return TrainState(params, opt_state, sync_state, key)
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_groups: int, n_pods: int):
+    opt = _make_optimizer(tc)
+    sync = tc.sync
+    mode = sync.mode
+    if mode != "dense":
+        compressor = dist.build_compressor(sync)
+        lam, nu = dist.sync_params(sync, n_groups)
+
+    def _loss(params, batch):
+        return loss_fn(params, cfg, batch, remat=tc.remat)
+
+    grad_fn = jax.value_and_grad(_loss, has_aux=True)
+
+    def _split_groups(batch, G):
+        return tree_map(
+            lambda a: a.reshape((G, a.shape[0] // G) + a.shape[1:]), batch)
+
+    # ------------------------------------------------------------------ dense
+    def dense_step(state: TrainState, batch):
+        A = max(1, tc.grad_accum)
+        if A == 1:
+            (loss, parts), grads = grad_fn(state.params, batch)
+            grads = constrain_grads(grads)
+        else:
+            # microbatch accumulation: bounds remat-residual memory by 1/A
+            # (required to fit the >100B archs in 16 GB HBM).  The embedding
+            # gather is hoisted out of the scan (see forward_train).
+            from repro.models.layers import embed as _embed
+            batch = dict(batch)
+            batch["inputs_embeds"] = _embed(state.params["embed"], batch["tokens"])
+            mb = _split_groups(batch, A)
+            zeros = constrain_grads(tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params))
+
+            def accum(carry, mbatch):
+                gsum, lsum = carry
+                (l, _), g = grad_fn(state.params, mbatch)
+                g = constrain_grads(g)
+                gsum = tree_map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            (gsum, lsum), _ = jax.lax.scan(accum, (zeros, jnp.zeros(())), mb)
+            grads = tree_map(lambda g: g / A, gsum)
+            loss = lsum / A
+            parts = {"ce": loss}
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        metrics = {"loss": loss, "ce": parts["ce"], "grad_norm": gnorm}
+        return TrainState(params, opt_state, None, state.key), metrics
+
+    # ------------------------------------------------------------- efbv-style
+    def efbv_step(state: TrainState, batch):
+        key, sub = jax.random.split(state.key)
+        gbatch = _split_groups(batch, n_groups)
+        (loss_g, parts), grads_g = jax.vmap(grad_fn, in_axes=(None, 0))(
+            state.params, gbatch)
+        loss = jnp.mean(loss_g)
+        g_est, sync_state = dist.efbv_sync(
+            sub, grads_g, state.sync_state, compressor, lam, nu)
+        g_est = tree_map(lambda g, p: g.astype(p.dtype), g_est, state.params)
+        g_est, gnorm = clip_by_global_norm(g_est, tc.grad_clip)
+        updates, opt_state = opt.update(g_est, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        metrics = {"loss": loss, "ce": jnp.mean(parts["ce"]), "grad_norm": gnorm}
+        return TrainState(params, opt_state, sync_state, key), metrics
+
+    # ---------------------------------------------------- hier / local replicas
+    G_rep = n_pods if mode == "hier" else n_groups
+
+    def local_step(state: TrainState, batch):
+        key, sub = jax.random.split(state.key)
+        gbatch = _split_groups(batch, G_rep)
+
+        def one_group(params, opt_state, gb):
+            (loss, parts), grads = grad_fn(params, gb)
+            grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            return apply_updates(params, updates), opt_state, loss, gnorm
+
+        params_g, opt_state, loss_g, gnorm_g = jax.vmap(one_group)(
+            state.params, state.opt_state, gbatch)
+        params_g, sync_state = dist.hier_param_sync(
+            sub, params_g, state.sync_state, compressor, lam, sync.sync_period)
+        metrics = {"loss": jnp.mean(loss_g), "ce": jnp.mean(loss_g),
+                   "grad_norm": jnp.mean(gnorm_g)}
+        return TrainState(params_g, opt_state, sync_state, key), metrics
+
+    if mode == "dense":
+        return dense_step
+    if mode in ("efbv", "ef21", "diana"):
+        return efbv_step
+    if mode in ("hier", "local"):
+        return local_step
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig, remat: str = "dots"):
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch, remat=remat)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_one(params, token, cache):
+        return model_decode_step(params, cfg, token, cache)
+
+    return decode_one

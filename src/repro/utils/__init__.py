@@ -1,0 +1,13 @@
+from repro.utils.tree import (
+    tree_size,
+    tree_bytes,
+    tree_zeros_like,
+    tree_add,
+    tree_sub,
+    tree_scale,
+    tree_dot,
+    tree_norm,
+    global_norm,
+    tree_map,
+)
+from repro.utils.logging import get_logger

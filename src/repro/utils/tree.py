@@ -1,0 +1,58 @@
+"""Small pytree algebra used across the optimizer / compression stack.
+
+These are intentionally dependency-free (no optax): the paper's algorithms
+(EF-BV control variates, Scafflix client states, SPPM prox solvers) are all
+expressed as pytree-to-pytree maps, so a tiny algebra keeps them readable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+tree_map = jax.tree_util.tree_map
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar elements in the pytree."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total number of bytes of the pytree's leaves."""
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_zeros_like(tree):
+    return tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(s, tree):
+    return tree_map(lambda x: s * x, tree)
+
+
+def tree_dot(a, b) -> jax.Array:
+    """Sum of elementwise products across two same-structure pytrees.
+
+    NB: deliberately sum(x*y), NOT jnp.vdot — vdot's reshape(-1) cannot be
+    represented on a 2D-sharded operand, so GSPMD would all-gather the full
+    tensor (catastrophic for FSDP gradient clipping at 100B scale)."""
+    parts = tree_map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return jax.tree_util.tree_reduce(jnp.add, parts, jnp.zeros((), jnp.float32))
+
+
+def tree_norm(tree) -> jax.Array:
+    """Euclidean norm of the concatenated pytree."""
+    return jnp.sqrt(tree_dot(tree, tree))
+
+
+def global_norm(tree) -> jax.Array:
+    return tree_norm(tree)

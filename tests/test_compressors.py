@@ -1,0 +1,122 @@
+"""Property tests for the C(eta, omega) compressor contracts (Ch. 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compressors as C
+
+DIMS = st.integers(min_value=8, max_value=300)
+
+
+def _vec(key, d, heavy=False):
+    x = jax.random.normal(key, (d,))
+    if heavy:
+        x = x * jnp.exp(2 * jax.random.normal(jax.random.fold_in(key, 1), (d,)))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# top-k: deterministic contraction  ||C(x)-x||^2 <= (1 - k/d) ||x||^2
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(d=DIMS, kf=st.sampled_from([0.05, 0.2, 0.5, 0.9]), seed=st.integers(0, 2**20))
+def test_topk_contractive(d, kf, seed):
+    x = _vec(jax.random.PRNGKey(seed), d, heavy=True)
+    c = C.top_k(kf)
+    err = float(jnp.sum((c(jax.random.PRNGKey(0), x) - x) ** 2))
+    k = max(1, int(round(kf * d)))
+    bound = (1 - k / d) * float(jnp.sum(x**2))
+    assert err <= bound + 1e-5 * float(jnp.sum(x**2))
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(64, 400), kf=st.sampled_from([0.1, 0.25]), seed=st.integers(0, 2**20))
+def test_block_topk_contractive(d, kf, seed):
+    x = _vec(jax.random.PRNGKey(seed), d, heavy=True)
+    c = C.block_top_k(kf, block=64)
+    err = float(jnp.sum((c(jax.random.PRNGKey(0), x) - x) ** 2))
+    assert err <= (1 - kf) * float(jnp.sum(x**2)) + 1e-5 * float(jnp.sum(x**2)) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# rand-k: unbiased, variance <= (d/k - 1)||x||^2
+# ---------------------------------------------------------------------------
+def test_randk_unbiased_and_variance():
+    d, kf = 64, 0.25
+    c = C.rand_k(kf)
+    x = _vec(jax.random.PRNGKey(3), d)
+    keys = jax.random.split(jax.random.PRNGKey(7), 4000)
+    ys = jax.vmap(lambda k: c(k, x))(keys)
+    mean = jnp.mean(ys, axis=0)
+    assert float(jnp.linalg.norm(mean - x)) < 0.05 * float(jnp.linalg.norm(x))
+    var = float(jnp.mean(jnp.sum((ys - x) ** 2, axis=1)))
+    omega = 1 / kf - 1
+    assert var <= (omega + 0.3) * float(jnp.sum(x**2))
+
+
+# ---------------------------------------------------------------------------
+# qsgd: unbiased stochastic rounding; per-coordinate error < scale
+# ---------------------------------------------------------------------------
+def test_qsgd_unbiased():
+    c = C.qsgd(bits=4, block=64)
+    x = _vec(jax.random.PRNGKey(5), 128) * 10
+    keys = jax.random.split(jax.random.PRNGKey(11), 4000)
+    ys = jax.vmap(lambda k: c(k, x))(keys)
+    mean = jnp.mean(ys, axis=0)
+    assert float(jnp.max(jnp.abs(mean - x))) < 0.2  # scale/sqrt(n) noise
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**20), bits=st.sampled_from([4, 8]))
+def test_qsgd_bounded_error(seed, bits):
+    c = C.qsgd(bits=bits, block=64)
+    x = _vec(jax.random.PRNGKey(seed), 200, heavy=True)
+    y = c(jax.random.PRNGKey(seed + 1), x)
+    s = 2 ** (bits - 1) - 1
+    # per-block absmax scale bounds the rounding error
+    xp = jnp.pad(x, (0, (-len(x)) % 64)).reshape(-1, 64)
+    yp = jnp.pad(y, (0, (-len(y)) % 64)).reshape(-1, 64)
+    scale = jnp.max(jnp.abs(xp), axis=1, keepdims=True) / s
+    assert bool(jnp.all(jnp.abs(yp - xp) <= scale + 1e-6))
+
+
+# ---------------------------------------------------------------------------
+# scaling calculus (Prop 2.2.1/2.2.2) against empirical estimates
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kf", [0.1, 0.3])
+def test_scaled_randk_contractive(kf):
+    c = C.rand_k(kf)
+    lam = C.lambda_star(c.eta, c.omega)
+    sc = C.scale_compressor(c, lam)
+    assert sc.contractive_alpha() is not None  # lam* makes it contractive
+    eta_hat, omega_hat = C.estimate_eta_omega(sc, jax.random.PRNGKey(0), 64,
+                                              n_vectors=8, n_samples=200)
+    assert eta_hat <= sc.eta + 0.1
+    assert omega_hat <= sc.omega * 1.5 + 0.05
+
+
+def test_efbv_rates_monotone_in_n():
+    """omega_ran = omega/n: nu* grows with n and r_av shrinks (EF-BV's point)."""
+    c = C.rand_k(0.2)
+    nus = [C.nu_star(c.eta, C.omega_ran_independent(c.omega, n)) for n in (1, 4, 64)]
+    assert nus == sorted(nus)
+    rs = [C.efbv_rates(c.eta, c.omega, c.omega / n,
+                       C.lambda_star(c.eta, c.omega), nu)[1]
+          for n, nu in zip((1, 4, 64), nus)]
+    assert rs == sorted(rs, reverse=True)
+
+
+def test_mix_comp_estimable():
+    for c in (C.mix_k(0.1, 0.3), C.comp_k(0.1, 0.5)):
+        eta, omega = C.estimate_eta_omega(c, jax.random.PRNGKey(2), 48,
+                                          n_vectors=6, n_samples=100)
+        assert 0 <= eta < 1.0
+        assert omega >= 0
+
+
+def test_tree_compress_shapes():
+    tree = {"a": jnp.ones((3, 5)), "b": jnp.ones((7,))}
+    out = C.tree_compress(C.top_k(0.5), jax.random.PRNGKey(0), tree)
+    assert out["a"].shape == (3, 5) and out["b"].shape == (7,)
