@@ -1,0 +1,113 @@
+"""repro.comm benchmark: codec sizes vs the analytic model, pack-kernel
+throughput, and topology-simulated round times per sync mode.
+
+Rows:
+  comm_codec/<name>       encode+decode one 64k-dim payload; derived =
+                          encoded bytes (== CommLedger record), the ratio to
+                          the analytic payload_bits/8 model, and round-trip
+                          exactness vs the compressor output
+  comm_kernel/<name>      Pallas pack kernels (interpret mode) vs jnp refs
+  comm_round/<mode>       per-round encoded bytes from the ledger + simulated
+                          wall-clock on two topology presets (Cohort-Squeeze
+                          'hier' shows the slow-link amortization)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.comm import (CommLedger, analytic_bits, decode, encode,
+                        get_topology, round_cost)
+from repro.configs.base import SyncConfig
+from repro.core import compressors as C
+
+D = 1 << 16
+
+
+def _codec_rows():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (D,))
+    cases = [
+        ("identity", C.identity()),
+        ("top_k(0.05)", C.top_k(0.05)),
+        ("rand_k(0.1)", C.rand_k(0.1)),
+        ("block_top_k(0.05)", C.block_top_k(0.05)),
+        ("qsgd_int8", C.qsgd(8)),
+        ("qsgd_int4", C.qsgd(4)),
+        ("qsgd_kernel_int8", C.qsgd_kernel(8)),
+    ]
+    rows = []
+    for name, comp in cases:
+        t0 = time.perf_counter()
+        p = encode(comp, key, x)
+        y_hat = decode(p)
+        us = (time.perf_counter() - t0) * 1e6
+        exact = bool(jnp.all(comp(key, x) == y_hat))
+        led = CommLedger()
+        led.record_payload(0, "probe", p)
+        ratio = 8.0 * led.total_bytes / analytic_bits(comp, D)
+        rows.append((f"comm_codec/{name}", us,
+                     f"bytes={led.total_bytes};vs_analytic={ratio:.3f};exact={exact}"))
+    return rows
+
+
+def _kernel_rows():
+    from repro.kernels import ops, ref
+
+    rows = []
+    mask = (jax.random.uniform(jax.random.PRNGKey(2), (D,)) < 0.05)
+    us = timed(lambda: jax.block_until_ready(ops.pack_bits(mask)))
+    words = ops.pack_bits(mask)
+    ok = bool(jnp.all(ops.unpack_bits(words, D) == mask.astype(jnp.uint32)))
+    rows.append(("comm_kernel/pack_bits", us,
+                 f"words={words.shape[0]};roundtrip={ok}"))
+
+    x = jax.random.normal(jax.random.PRNGKey(3), (D,)) * 5
+    key = jax.random.PRNGKey(4)
+    us = timed(lambda: jax.block_until_ready(ops.quantize_pack(x, key)[0]))
+    q, scales = ops.quantize_pack(x, key)
+    dq = ops.unpack_dequantize(q, scales, D)
+    carrier = ops.quantize_dequantize(x, key)
+    ok = bool(jnp.all(dq == carrier.reshape(-1)))
+    rows.append(("comm_kernel/quantize_pack", us,
+                 f"plane_bytes={q.size + 4 * scales.size};matches_carrier={ok}"))
+    return rows
+
+
+def _round_rows():
+    n_params = 25_000_000  # ~100 MB fp32 model
+    rows = []
+    for label, sync in [
+        ("dense", SyncConfig(mode="dense")),
+        ("efbv_top_k0.05", SyncConfig(mode="efbv", compressor="top_k",
+                                      compress_ratio=0.05)),
+        ("efbv_qsgd8", SyncConfig(mode="efbv", compressor="qsgd", quant_bits=8)),
+        ("hier_qsgd8_p8", SyncConfig(mode="hier", compressor="qsgd",
+                                     quant_bits=8, sync_period=8)),
+    ]:
+        t0 = time.perf_counter()
+        cost = round_cost(sync, n_params)
+        us = (time.perf_counter() - t0) * 1e6
+        t_wan = round_cost(sync, n_params,
+                           topology=get_topology("geo_wan")).time_s
+        ratio = cost.encoded_bits / cost.analytic_bits if cost.analytic_bits else 0
+        rows.append((f"comm_round/{label}", us,
+                     f"MB={cost.total_bytes/1e6:.2f};vs_analytic={ratio:.3f};"
+                     f"t_v5p={cost.time_s*1e3:.2f}ms;t_wan={t_wan*1e3:.1f}ms"))
+    return rows
+
+
+def run():
+    return _codec_rows() + _kernel_rows() + _round_rows()
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,12 @@
             upload bytes on class-wise (S1) and Dirichlet (S2) non-IID splits
   Fig 4.4 — global pruning ratio sweep
   Tab 4.2 — local pruning strategies (fixed / uniform / ordered dropout)
-Derived: final accuracy + relative upload cost."""
+Derived: final accuracy + relative upload cost.
+
+Upload accounting rides the CommLedger: fedp3_train's per-round uploaded
+floats become per-round inter-link byte records (4 bytes each, the dense fp32
+wire format the clients actually ship), so the relative-upload column and the
+absolute MB both come from the ledger, not a separate counter."""
 from __future__ import annotations
 
 import time
@@ -11,6 +16,7 @@ import time
 import numpy as np
 
 from benchmarks.common import emit
+from repro.comm import CommLedger
 from repro.core.fedp3 import FedP3Config, fedp3_train, make_classification
 from repro.data.federated import classwise_split, dirichlet_split
 
@@ -28,22 +34,34 @@ def _data(split):
     return [X[i] for i in idx], [y[i] for i in idx], Xte, yte
 
 
+def _upload_ledger(up_trace) -> CommLedger:
+    """Per-round uploaded floats -> per-round inter-link byte records."""
+    led = CommLedger()
+    prev = 0.0
+    for t, cum_floats in enumerate(np.asarray(up_trace)):
+        led.record(t, "clients->server", (cum_floats - prev) * 4, kind="inter")
+        prev = cum_floats
+    return led
+
+
 def run():
     rows = []
     # --- Fig 4.2: layer overlap
     for split in ("S1", "S2"):
         Xs, Ys, Xte, Yte = _data(split)
-        full_up = None
+        full_bytes = None
         for name, k in (("full", 4), ("OPU3", 3), ("OPU2", 2), ("LowerB", 1)):
             cfg = FedP3Config(n_clients=10, clients_per_round=5, layers_per_client=k,
                               global_prune_ratio=0.9, local_steps=4, lr=0.2, seed=0)
             t0 = time.perf_counter()
             acc, up, _ = fedp3_train(cfg, Xs, Ys, SIZES, ROUNDS, Xte, Yte)
             us = (time.perf_counter() - t0) * 1e6
-            if full_up is None:
-                full_up = up[-1]
+            led = _upload_ledger(up)
+            if full_bytes is None:
+                full_bytes = led.total_bytes
             rows.append((f"fedp3_fig4.2/{split}/{name}", us,
-                         f"acc={acc[-1]:.3f};upload_rel={up[-1]/full_up:.2f}"))
+                         f"acc={acc[-1]:.3f};upload_rel={led.total_bytes/full_bytes:.2f};"
+                         f"upload_kb={led.total_bytes/1e3:.1f}"))
 
     # --- Fig 4.4: global pruning ratio
     Xs, Ys, Xte, Yte = _data("S2")

@@ -4,7 +4,9 @@
     FLIX objective (class-wise non-iid synthetic logreg);
 (b) communication-probability ablation (Fig 3.3c): smaller p converges in
     fewer communications.
-Derived: communicated rounds to reach the gap target."""
+Derived: communicated rounds + CommLedger-encoded bytes to reach the gap
+target (each communicated round ships one dense fp32 model per client: the
+encoded payload of the identity codec, recorded per round in the ledger)."""
 from __future__ import annotations
 
 import time
@@ -14,6 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
+from repro.comm import CommLedger, encode
+from repro.core import compressors as C
 from repro.core.scafflix import (
     flix_objective, flix_optimum, local_optimum, logreg_grads,
     scafflix_init, scafflix_run)
@@ -31,6 +35,18 @@ def run():
     x_loc = jnp.stack([local_optimum(A[i], b[i], prob.mu) for i in range(n)])
     gfn = lambda xt: logreg_grads(xt, A, b, prob.mu)
     rows = []
+    # one communicated round ships one dense fp32 model per client (up):
+    # measure the encoded payload once, record it per communicated round
+    ident = C.identity()
+    msg_bytes = encode(ident, jax.random.PRNGKey(0),
+                       jnp.zeros((d,), jnp.float32)).nbytes
+
+    def ledger_bytes(comms, upto):
+        led = CommLedger()
+        for t, did_comm in enumerate(np.asarray(comms)[: upto + 1]):
+            if did_comm:
+                led.record(t, "client->server", msg_bytes, kind="inter")
+        return led.total_bytes
 
     for alpha in (0.1, 0.3, 0.5, 0.9):
         alphas = jnp.full((n,), alpha)
@@ -48,7 +64,8 @@ def run():
         gaps = np.asarray(trace) - fstar
         cum_comms = np.cumsum(np.asarray(comms))
         hit = np.argmax(gaps < TARGET) if (gaps < TARGET).any() else -1
-        derived = (f"comms_to_{TARGET:g}={cum_comms[hit]}" if hit >= 0
+        derived = (f"comms_to_{TARGET:g}={cum_comms[hit]};"
+                   f"bytes={ledger_bytes(comms, hit)}" if hit >= 0
                    else f"gap={gaps[-1]:.1e}")
         rows.append((f"scafflix_fig3.1/alpha={alpha}/scafflix", us, derived))
 
@@ -65,7 +82,9 @@ def run():
         us = (time.perf_counter() - t0) * 1e6
         gd_gaps = np.asarray(gd_gaps)
         hit = np.argmax(gd_gaps < TARGET) if (gd_gaps < TARGET).any() else -1
-        derived = f"comms_to_{TARGET:g}={hit}" if hit >= 0 else f"gap={gd_gaps[-1]:.1e}"
+        derived = (f"comms_to_{TARGET:g}={hit};"
+                   f"bytes={ledger_bytes(np.ones(ROUNDS), hit)}" if hit >= 0
+                   else f"gap={gd_gaps[-1]:.1e}")
         rows.append((f"scafflix_fig3.1/alpha={alpha}/gd", us, derived))
 
     # --- Fig 3.3c: p ablation at alpha=0.3
@@ -83,7 +102,9 @@ def run():
         gaps = np.asarray(trace) - fstar
         cum = np.cumsum(np.asarray(comms))
         hit = np.argmax(gaps < TARGET) if (gaps < TARGET).any() else -1
-        derived = f"comms_to_{TARGET:g}={cum[hit]}" if hit >= 0 else f"gap={gaps[-1]:.1e}"
+        derived = (f"comms_to_{TARGET:g}={cum[hit]};"
+                   f"bytes={ledger_bytes(comms, hit)}" if hit >= 0
+                   else f"gap={gaps[-1]:.1e}")
         rows.append((f"scafflix_fig3.3c/p={p}", us, derived))
     return rows
 

@@ -11,12 +11,13 @@ import time
 
 
 def main() -> None:
-    from benchmarks import bench_efbv, bench_fedp3, bench_kernels
+    from benchmarks import bench_comm, bench_efbv, bench_fedp3, bench_kernels
     from benchmarks import bench_scafflix, bench_scafflix_nn, bench_sppm
     from benchmarks import bench_symwanda
     from benchmarks.common import emit
 
     modules = [
+        ("comm(codecs/ledger/topology)", bench_comm),
         ("efbv(Fig2.2)", bench_efbv),
         ("scafflix(Fig3.1/3.3)", bench_scafflix),
         ("scafflix_nn(Fig3.2)", bench_scafflix_nn),

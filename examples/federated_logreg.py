@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import CommLedger, encode
 from repro.core import compressors as C
 from repro.core.ef_bv import efbv_gd, efbv_init, efbv_params
 from repro.core.scafflix import (flix_objective, flix_optimum, local_optimum,
@@ -37,6 +38,9 @@ def main():
 
     print("== Ch.2: EF-BV family, rand-k(10%), 800 rounds ==")
     comp = C.rand_k(0.1)
+    # size of one encoded per-client payload (exact wire bytes, repro.comm)
+    msg_bytes = encode(comp, jax.random.PRNGKey(7),
+                       jax.random.normal(jax.random.PRNGKey(8), (d,))).nbytes
     for mode in ("efbv", "ef21", "diana"):
         lam, nu = efbv_params(comp, n, mode)
         om_ran = comp.omega / n if mode in ("efbv", "diana") else comp.omega
@@ -44,9 +48,11 @@ def main():
         _, _, tr = efbv_gd(jax.random.PRNGKey(0), jnp.zeros(d), grad_fn,
                            efbv_init(n, d), comp, lam, nu, gamma, 800, f_fn)
         gaps = np.asarray(tr) - f_star
-        bits = comp.payload_bits(d) * np.arange(1, len(gaps) + 1)
         hit = np.argmax(gaps < 1e-3) if (gaps < 1e-3).any() else -1
-        msg = f"bits-to-1e-3 = {bits[hit]:.0f}" if hit >= 0 else f"gap {gaps[-1]:.2e}"
+        ledger = CommLedger.from_rounds(msg_bytes,
+                                        len(gaps) if hit < 0 else hit + 1)
+        msg = (f"bits-to-1e-3 = {ledger.cumulative_bytes()[hit] * 8}" if hit >= 0
+               else f"gap {gaps[-1]:.2e}")
         print(f"  {mode:6s} lam={lam:.3f} nu={nu:.3f} gamma={gamma:.4f}  {msg}")
 
     print("== Ch.3: Scafflix double acceleration (p=0.2) ==")

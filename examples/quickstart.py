@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import SyncConfig, TrainConfig
-from repro.core.distributed import bits_per_round
+from repro.core.distributed import round_comm
 from repro.data.synthetic import SyntheticLMDataset, lm_batch_iterator
 from repro.models import decode_step, prefill
 from repro.training.loop import train
@@ -46,9 +46,10 @@ def main():
     state, hist = train(cfg, tc, it, n_groups=n_groups, n_pods=2,
                         steps=args.steps, log_every=25)
     print(f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
-    bits = bits_per_round(tc.sync, cfg.param_count())
-    print(f"modeled sync payload: {bits/8e6:.2f} MB/round "
-          f"(dense fp32 would be {cfg.param_count()*4/1e6:.2f} MB)")
+    cost = round_comm(tc.sync, cfg.param_count())
+    print(f"encoded sync payload: {cost.encoded_bits/8e6:.2f} MB/round "
+          f"(dense fp32 would be {cfg.param_count()*4/1e6:.2f} MB); "
+          f"simulated round comm on {tc.sync.topology}: {cost.time_s*1e3:.2f} ms")
 
     # decode a continuation
     params = state.params

@@ -1,0 +1,26 @@
+"""repro.comm — wire-level payload codecs, byte-accurate ledger, and the
+link-topology simulator.
+
+Layers:
+  codecs      encode/decode packed payloads for every compressor family;
+              decode(encode(x)) == compressor(x) bit-for-bit
+  ledger      CommLedger: per-round, per-link encoded byte records — the one
+              audited source of truth for bits-on-the-wire
+  topology    Link/Topology: cross-device vs cross-pod bandwidth/latency,
+              ring-collective timing, presets (TPU superpod / WAN / edge FL)
+  accounting  RoundCost per sync mode (measured, amortized, simulated time);
+              backs distributed.bits_per_round
+"""
+from repro.comm.accounting import (RoundCost, measured_payload_bits,
+                                   round_bits, round_cost)
+from repro.comm.codecs import (Payload, analytic_bits, decode, encode,
+                               encoded_bits, roundtrip_equal)
+from repro.comm.ledger import CommLedger, CommRecord, crosscheck_hlo
+from repro.comm.topology import PRESETS, Link, Topology, get_topology
+
+__all__ = [
+    "Payload", "encode", "decode", "encoded_bits", "analytic_bits",
+    "roundtrip_equal", "CommLedger", "CommRecord", "crosscheck_hlo",
+    "Link", "Topology", "PRESETS", "get_topology",
+    "RoundCost", "round_cost", "round_bits", "measured_payload_bits",
+]

@@ -1,0 +1,110 @@
+"""Link-topology simulator: cross-device vs cross-pod bandwidth/latency.
+
+The paper's communication-efficiency story is about *heterogeneous* links:
+Cohort-Squeeze (Ch. 5) pays c_local per intra-cluster round and c_global per
+cross-cluster round and shows K > 1 local rounds win whenever
+c_global >> c_local.  This module gives those abstract costs physical units:
+a ``Topology`` holds one fast fabric link class ("intra": ICI/NVLink-scale)
+and one slow one ("inter": DCN / WAN / federated edge), and converts message
+or collective sizes into seconds.
+
+Collective model (ring): an all-reduce over g participants moves
+2*(g-1)/g * nbytes per device in 2*(g-1) latency-bound steps; reduce and
+broadcast/gather halves are (g-1)/g each.  This matches how
+launch/hlo_analysis.py counts per-device collective payload, so simulated
+times compose with the HLO-derived byte totals in launch/costing.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class Link:
+    """One link class: sustained bandwidth (GB/s) + per-message latency."""
+    gbps: float          # gigabytes per second, per link
+    latency_us: float    # one-way message latency, microseconds
+
+    def time_s(self, nbytes: float) -> float:
+        return self.latency_us * 1e-6 + float(nbytes) / (self.gbps * 1e9)
+
+
+@dataclass(frozen=True)
+class Topology:
+    name: str
+    n_pods: int
+    devices_per_pod: int
+    intra: Link          # cross-device, same pod (ICI-class)
+    inter: Link          # cross-pod (DCN / WAN-class)
+
+    @property
+    def n_devices(self) -> int:
+        return self.n_pods * self.devices_per_pod
+
+    def link(self, kind: str) -> Link:
+        if kind == "intra":
+            return self.intra
+        if kind == "inter":
+            return self.inter
+        raise KeyError(f"unknown link kind {kind!r} (intra|inter)")
+
+    # -- collective timing (ring model) ------------------------------------
+    def allreduce_time_s(self, nbytes: float, scope: str = "intra") -> float:
+        """Ring all-reduce of an nbytes-per-device buffer.
+
+        scope: "intra" (one pod, devices_per_pod ring), "inter" (one ring of
+        pod leaders over slow links), "global" (hierarchical: intra reduce ->
+        inter all-reduce -> intra broadcast, the standard 2-level schedule).
+        """
+        if scope == "intra":
+            return self._ring(self.intra, self.devices_per_pod, nbytes)
+        if scope == "inter":
+            return self._ring(self.inter, self.n_pods, nbytes)
+        if scope == "global":
+            return (self._ring_half(self.intra, self.devices_per_pod, nbytes)
+                    + self._ring(self.inter, self.n_pods, nbytes)
+                    + self._ring_half(self.intra, self.devices_per_pod, nbytes))
+        raise KeyError(f"unknown scope {scope!r}")
+
+    @staticmethod
+    def _ring(link: Link, g: int, nbytes: float) -> float:
+        if g <= 1:
+            return 0.0
+        steps = 2 * (g - 1)
+        return steps * link.latency_us * 1e-6 + (
+            2.0 * (g - 1) / g * float(nbytes)) / (link.gbps * 1e9)
+
+    @staticmethod
+    def _ring_half(link: Link, g: int, nbytes: float) -> float:
+        """Reduce-scatter or all-gather half of the ring."""
+        if g <= 1:
+            return 0.0
+        steps = g - 1
+        return steps * link.latency_us * 1e-6 + (
+            (g - 1) / g * float(nbytes)) / (link.gbps * 1e9)
+
+
+# ---------------------------------------------------------------------------
+# presets — the scenarios the repo simulates
+# ---------------------------------------------------------------------------
+PRESETS: Dict[str, Topology] = {
+    # 2 TPU pods: ~100 GB/s ICI per chip, ~12.5 GB/s DCN per host link
+    "v5p_superpod": Topology("v5p_superpod", n_pods=2, devices_per_pod=256,
+                             intra=Link(gbps=100.0, latency_us=1.0),
+                             inter=Link(gbps=12.5, latency_us=25.0)),
+    # geo-distributed datacenters over WAN
+    "geo_wan": Topology("geo_wan", n_pods=4, devices_per_pod=64,
+                        intra=Link(gbps=50.0, latency_us=2.0),
+                        inter=Link(gbps=1.0, latency_us=20_000.0)),
+    # cross-device federated learning: phones behind broadband uplinks
+    "edge_fl": Topology("edge_fl", n_pods=100, devices_per_pod=1,
+                        intra=Link(gbps=10.0, latency_us=10.0),
+                        inter=Link(gbps=0.00625, latency_us=50_000.0)),
+}
+
+
+def get_topology(name: str) -> Topology:
+    if name not in PRESETS:
+        raise KeyError(f"unknown topology {name!r}; known {sorted(PRESETS)}")
+    return PRESETS[name]

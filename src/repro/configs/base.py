@@ -244,6 +244,9 @@ class SyncConfig:
     quant_bits: int = 8
     sync_period: int = 1              # Scafflix E[1/p]
     personalization_alpha: float = 1.0  # FLIX alpha (1 = no personalization)
+    # link topology preset (repro.comm.topology.PRESETS) used to turn
+    # per-round encoded bytes into simulated wall-clock
+    topology: str = "v5p_superpod"
 
 
 @dataclass(frozen=True)

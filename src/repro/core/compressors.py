@@ -40,6 +40,23 @@ import jax.numpy as jnp
 
 
 @dataclass(frozen=True)
+class WireSpec:
+    """How a compressor's output is packed on the wire (repro.comm.codecs).
+
+    scheme: dense | sparse_idx32 | sparse_block | sparse_bitmap | quant
+    block/bits: quantizer blocking; axis: "flat" (blocks over the flattened
+    tensor), "last" (blocks along the last dim, sharding-safe), or "kernel"
+    (the Pallas quantize-pack layout).  ``gain`` is a post-scale applied by
+    scale_compressor — the receiver multiplies it back in after dequant.
+    """
+    scheme: str = "dense"
+    block: int = 0
+    bits: int = 32
+    axis: str = "flat"
+    gain: float = 1.0
+
+
+@dataclass(frozen=True)
 class Compressor:
     name: str
     fn: Callable            # (key, flat_x) -> flat_x_hat
@@ -50,6 +67,8 @@ class Compressor:
     # sharding-safe operators handle any shape themselves: reshape(-1) of a
     # 2D-sharded leaf forces a GSPMD all-gather, so they must NOT flatten
     flatten: bool = True
+    # wire format for repro.comm.codecs.encode/decode (None -> dense)
+    wire: Optional[WireSpec] = None
 
     def __call__(self, key, x):
         if not self.flatten:
@@ -75,6 +94,9 @@ class Compressor:
 def scale_compressor(c: Compressor, lam: float) -> Compressor:
     eta = None if c.eta is None else lam * c.eta + (1.0 - lam)
     omega = None if c.omega is None else lam**2 * c.omega
+    wire = c.wire
+    if wire is not None:
+        wire = replace(wire, gain=wire.gain * lam)
     return Compressor(
         name=f"scale({c.name},{lam:.4g})",
         fn=lambda key, x, c=c, lam=lam: lam * c.fn(key, x),
@@ -82,6 +104,10 @@ def scale_compressor(c: Compressor, lam: float) -> Compressor:
         omega=omega,
         bits_per_dim=c.bits_per_dim,
         deterministic=c.deterministic,
+        # keep the flatten flag: dropping it silently re-enabled the
+        # reshape(-1) that forces a GSPMD all-gather on sharded leaves
+        flatten=c.flatten,
+        wire=wire,
     )
 
 
@@ -121,7 +147,8 @@ def efbv_stepsize(L: float, L_tilde: float, eta: float, omega: float,
 # ---------------------------------------------------------------------------
 def identity() -> Compressor:
     return Compressor("identity", lambda key, x: x, eta=0.0, omega=0.0,
-                      bits_per_dim=32.0, deterministic=True)
+                      bits_per_dim=32.0, deterministic=True,
+                      wire=WireSpec("dense"))
 
 
 def rand_k(k_frac: float) -> Compressor:
@@ -137,7 +164,8 @@ def rand_k(k_frac: float) -> Compressor:
 
     omega = 1.0 / k_frac - 1.0
     return Compressor(f"rand_k({k_frac:g})", fn, eta=0.0, omega=omega,
-                      bits_per_dim=k_frac * (32 + 32))
+                      bits_per_dim=k_frac * (32 + 32),
+                      wire=WireSpec("sparse_idx32"))
 
 
 def top_k(k_frac: float) -> Compressor:
@@ -152,7 +180,8 @@ def top_k(k_frac: float) -> Compressor:
 
     eta = math.sqrt(max(0.0, 1.0 - k_frac))
     return Compressor(f"top_k({k_frac:g})", fn, eta=eta, omega=0.0,
-                      bits_per_dim=k_frac * (32 + 32), deterministic=True)
+                      bits_per_dim=k_frac * (32 + 32), deterministic=True,
+                      wire=WireSpec("sparse_idx32"))
 
 
 def block_top_k(k_frac: float, block: int = 2048) -> Compressor:
@@ -174,7 +203,8 @@ def block_top_k(k_frac: float, block: int = 2048) -> Compressor:
     eta = math.sqrt(max(0.0, 1.0 - k_frac))
     return Compressor(f"block_top_k({k_frac:g},{block})", fn, eta=eta, omega=0.0,
                       bits_per_dim=k_frac * (32 + math.log2(block)),
-                      deterministic=True)
+                      deterministic=True,
+                      wire=WireSpec("sparse_block", block=block))
 
 
 def qsgd(bits: int = 8, block: int = 2048, stochastic: bool = True) -> Compressor:
@@ -205,7 +235,8 @@ def qsgd(bits: int = 8, block: int = 2048, stochastic: bool = True) -> Compresso
                       eta=0.0 if stochastic else None,
                       omega=omega if stochastic else None,
                       bits_per_dim=float(bits),
-                      deterministic=not stochastic)
+                      deterministic=not stochastic,
+                      wire=WireSpec("quant", block=block, bits=bits, axis="flat"))
 
 
 def mix_k(k_frac_top: float, k_frac_rand: float, rho: float = 0.5) -> Compressor:
@@ -220,7 +251,8 @@ def mix_k(k_frac_top: float, k_frac_rand: float, rho: float = 0.5) -> Compressor
 
     bits = rho * t.bits_per_dim + (1 - rho) * r.bits_per_dim
     return Compressor(f"mix({k_frac_top:g},{k_frac_rand:g},{rho:g})", fn,
-                      eta=None, omega=None, bits_per_dim=bits)
+                      eta=None, omega=None, bits_per_dim=bits,
+                      wire=WireSpec("sparse_idx32"))
 
 
 def comp_k(k_frac_top: float, k_frac_rand: float) -> Compressor:
@@ -241,7 +273,8 @@ def comp_k(k_frac_top: float, k_frac_rand: float) -> Compressor:
 
     return Compressor(f"comp({k_frac_top:g},{k_frac_rand:g})", fn,
                       eta=None, omega=None,
-                      bits_per_dim=k_frac_top * (32 + 32))
+                      bits_per_dim=k_frac_top * (32 + 32),
+                      wire=WireSpec("sparse_idx32"))
 
 
 def qsgd_sharded(bits: int = 8, block: int = 256, stochastic: bool = True) -> Compressor:
@@ -273,7 +306,8 @@ def qsgd_sharded(bits: int = 8, block: int = 256, stochastic: bool = True) -> Co
     return Compressor(f"qsgd_sharded({bits}b,{block})", fn,
                       eta=0.0 if stochastic else None,
                       omega=block / (4.0 * s * s) if stochastic else None,
-                      bits_per_dim=float(bits), flatten=False)
+                      bits_per_dim=float(bits), flatten=False,
+                      wire=WireSpec("quant", block=block, bits=bits, axis="last"))
 
 
 def qsgd_kernel(bits: int = 8, interpret: bool = True) -> Compressor:
@@ -287,7 +321,8 @@ def qsgd_kernel(bits: int = 8, interpret: bool = True) -> Compressor:
         return quantize_dequantize(x, key, bits=bits, interpret=interpret)
 
     return Compressor(f"qsgd_kernel({bits}b)", fn, eta=0.0,
-                      omega=QBLOCK / (4.0 * s * s), bits_per_dim=float(bits))
+                      omega=QBLOCK / (4.0 * s * s), bits_per_dim=float(bits),
+                      wire=WireSpec("quant", block=QBLOCK, bits=bits, axis="kernel"))
 
 
 _REGISTRY = {

@@ -7,9 +7,10 @@ pure pjit/GSPMD, no replication-invariant tricks: XLA turns the mean over the
 group axis into the all-reduce, and when the payload has been compressed to
 int8 (qsgd) the all-reduce moves 4x fewer bytes — a *structural* saving
 visible in the §Roofline collective term.  Sparsifying compressors (top-k)
-keep dense carriers on-chip; their wire savings are *modeled* by
-``payload_bits`` exactly as the paper counts them (Fig 2.2), and additionally
-realized in frequency by hier/local modes (bits * p).
+keep dense carriers on-chip; their wire payloads are packed and *measured* by
+the repro.comm codecs (bits_per_round below is a thin wrapper over that
+ledger accounting), and additionally realized in frequency by hier/local
+modes (bits * p).
 
 Modes (SyncConfig.mode):
   dense  - mean over groups (baseline all-reduce; what FedAvg does per round)
@@ -164,10 +165,22 @@ def hier_param_sync(key, params_g, state: SyncState, c: Compressor, lam: float,
 # Bits accounting (per communication round, per worker) — the paper's metric
 # ---------------------------------------------------------------------------
 def bits_per_round(sync: SyncConfig, n_params: int) -> float:
-    c = build_compressor(sync)
-    bits = c.payload_bits(n_params)
-    if sync.mode == "hier":
-        bits = bits / max(1, sync.sync_period)
-    if sync.mode == "local":
-        bits = 32.0 * n_params / max(1, sync.sync_period)
-    return bits
+    """Thin wrapper over repro.comm accounting.
+
+    The number is *measured*: the configured compressor's codec encodes a
+    probe payload and the packed-buffer bytes are amortized per mode/period
+    (see repro.comm.accounting.round_cost).  The old closed-form model lives
+    on as RoundCost.analytic_bits, used only as a cross-check.
+    """
+    from repro.comm import round_bits
+
+    return round_bits(sync, n_params)
+
+
+def round_comm(sync: SyncConfig, n_params: int, topology=None):
+    """Full per-round communication report (bytes per link class + simulated
+    wall-clock on the configured link topology). Convenience re-export so the
+    runtime sync modes and the launch costing share one accounting path."""
+    from repro.comm import round_cost
+
+    return round_cost(sync, n_params, topology=topology)

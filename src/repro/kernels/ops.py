@@ -18,10 +18,85 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import bitpack as _bp
 from repro.kernels import nm_prune as _nm
 from repro.kernels import quant8 as _q8
 from repro.kernels import wanda_score as _ws
 from repro.kernels import ref as _ref
+
+
+# ---------------------------------------------------------------------------
+# bitpack (repro.comm wire formats)
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("interpret",))
+def pack_bits(mask: jax.Array, interpret: bool = True) -> jax.Array:
+    """Flat {0,1} mask (d,) -> uint32 word stream (ceil(d/32),).
+
+    Bit layout: with W = ceil(d/32), bit j of word w is mask[j*W + w] — the
+    stride-W order lets the kernel reduce along the 32 sublanes with lanes
+    kept 128-aligned.  ``unpack_bits`` inverts it exactly.
+    """
+    d = mask.shape[0]
+    w = -(-d // _bp.PACK_BITS)
+    wp = -(-w // _bp.PACK_LANES) * _bp.PACK_LANES
+    m2d = (jnp.zeros((_bp.PACK_BITS * w,), jnp.uint32).at[:d]
+           .set(mask.astype(jnp.uint32)).reshape(_bp.PACK_BITS, w))
+    m2d = jnp.zeros((_bp.PACK_BITS, wp), jnp.uint32).at[:, :w].set(m2d)
+    return _bp.pack_mask_2d(m2d, interpret=interpret)[0, :w]
+
+
+@partial(jax.jit, static_argnames=("d", "interpret"))
+def unpack_bits(words: jax.Array, d: int, interpret: bool = True) -> jax.Array:
+    """Inverse of pack_bits: (ceil(d/32),) uint32 -> (d,) {0,1} uint32."""
+    w = words.shape[0]
+    assert w == -(-d // _bp.PACK_BITS), (w, d)
+    wp = -(-w // _bp.PACK_LANES) * _bp.PACK_LANES
+    wpad = jnp.zeros((1, wp), jnp.uint32).at[0, :w].set(words)
+    bits = _bp.unpack_mask_2d(wpad, interpret=interpret)
+    return bits[:, :w].reshape(-1)[:d]
+
+
+@partial(jax.jit, static_argnames=("bits", "interpret"))
+def quantize_pack(x: jax.Array, key: jax.Array, bits: int = 8,
+                  interpret: bool = True):
+    """Flat/any-shape tensor -> (int8 plane (rows, QBLOCK), scales (rows, 1)).
+
+    Shape plumbing (padding, noise draw) matches quantize_dequantize exactly,
+    so ``q * scales`` reproduces its dequantized output bit-for-bit — the
+    codec's decode of the wire planes equals the on-chip compressor carrier.
+    """
+    flat = x.reshape(-1)
+    d = flat.shape[0]
+    qb, tr = _q8.QBLOCK, _q8.TILE_ROWS
+    rows = -(-d // qb)
+    rows_pad = -(-rows // tr) * tr
+    padded = jnp.zeros((rows_pad * qb,), x.dtype).at[:d].set(flat).reshape(rows_pad, qb)
+    noise = jax.random.uniform(key, padded.shape, jnp.float32)
+    return _bp.quant_pack_2d(padded, noise, bits=bits, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("d", "interpret"))
+def unpack_dequantize(q: jax.Array, scales: jax.Array, d: int,
+                      interpret: bool = True) -> jax.Array:
+    """Inverse of quantize_pack: wire planes -> flat (d,) float32 tensor."""
+    out = _bp.unpack_dequant_2d(q, scales, interpret=interpret)
+    return out.reshape(-1)[:d]
+
+
+def nibble_pack(q: jax.Array) -> jax.Array:
+    """int8 plane with values in [-8, 7] -> two-per-byte uint8 (transport
+    packing for 4-bit quantizers; pure jnp — runs at round boundaries)."""
+    u = (q.reshape(-1).astype(jnp.int32) + 8).astype(jnp.uint8)
+    if u.shape[0] % 2:
+        u = jnp.concatenate([u, jnp.zeros((1,), jnp.uint8)])
+    return (u[0::2] | (u[1::2] << 4)).astype(jnp.uint8)
+
+
+def nibble_unpack(packed: jax.Array, n: int) -> jax.Array:
+    """Inverse of nibble_pack -> int8 (n,) values in [-8, 7]."""
+    lo = (packed & 0xF).astype(jnp.int32) - 8
+    hi = ((packed >> 4) & 0xF).astype(jnp.int32) - 8
+    return jnp.stack([lo, hi], axis=1).reshape(-1)[:n].astype(jnp.int8)
 
 
 # ---------------------------------------------------------------------------

@@ -16,6 +16,34 @@ def quant_dequant_ref(x2d: jax.Array, noise2d: jax.Array, bits: int = 8) -> jax.
     return (q * scale).astype(x2d.dtype)
 
 
+def pack_mask_ref(mask2d: jax.Array) -> jax.Array:
+    """(32, C) {0,1} -> (1, C) uint32: bit j of word c is mask[j, c]."""
+    bits = mask2d.astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)[:, None]
+    return jnp.sum(bits << shifts, axis=0, keepdims=True).astype(jnp.uint32)
+
+
+def unpack_mask_ref(words2d: jax.Array) -> jax.Array:
+    """(1, C) uint32 -> (32, C) {0,1} uint32."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)[:, None]
+    return ((words2d >> shifts) & jnp.uint32(1)).astype(jnp.uint32)
+
+
+def quant_pack_ref(x2d: jax.Array, noise2d: jax.Array, bits: int = 8):
+    """Blockwise absmax quantize to the wire planes (int8 q, fp32 scales)."""
+    s = 2 ** (bits - 1) - 1
+    x = x2d.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) / s
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.clip(jnp.floor(x / scale + noise2d), -s, s)
+    return q.astype(jnp.int8), scale
+
+
+def unpack_dequant_ref(q2d: jax.Array, scales: jax.Array,
+                       out_dtype=jnp.float32) -> jax.Array:
+    return (q2d.astype(jnp.float32) * scales).astype(out_dtype)
+
+
 def nm_prune_ref(w: jax.Array, scores: jax.Array, n: int = 2, m: int = 4):
     """Keep n largest scores per group of m along d_in; first-index tie-break."""
     d_in, d_out = w.shape

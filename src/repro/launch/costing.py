@@ -130,7 +130,32 @@ def corrected_costs(arch_cfg: ModelConfig, mesh, shape_name: str,
         corrected[key] = max(corr, a)
     return {"corrected": corrected, "variants": {"A": A, "B": B, "C": C},
             "n_periods": n_periods, "grad_accum": grad_accum,
-            "mean_span": mean_span, "detail": detail}
+            "mean_span": mean_span, "detail": detail,
+            "comm_time": comm_time_model(corrected)}
+
+
+def comm_time_model(measures: Dict[str, float], topology=None) -> Dict[str, float]:
+    """Bandwidth-bound collective wall-clock from the corrected per-device bytes.
+
+    Splits the HLO-derived collective traffic onto the link topology: the
+    inter-pod share rides the slow links, the rest the intra-pod fabric — the
+    same byte split repro.comm's ledger records (ledger.crosscheck_hlo audits
+    the totals).  This is a bytes/bandwidth *lower bound*: the HLO totals
+    aggregate many collectives, so per-message latency and ring step counts
+    are not attributable here — the per-round latency-aware model lives in
+    repro.comm (Topology.allreduce_time_s / CommLedger.round_time_s).
+    """
+    from repro.comm.topology import get_topology
+
+    topo = topology or get_topology("v5p_superpod")
+    total = float(measures.get("coll_total", 0.0))
+    inter = float(measures.get("coll_interpod", 0.0))
+    intra = max(0.0, total - inter)
+    t_intra = intra / (topo.intra.gbps * 1e9)
+    t_inter = inter / (topo.inter.gbps * 1e9)
+    return {"intra_bytes": intra, "inter_bytes": inter,
+            "t_intra_s": t_intra, "t_inter_s": t_inter,
+            "t_comm_s": t_intra + t_inter, "topology": topo.name}
 
 
 def model_flops(cfg: ModelConfig, shape_name: str) -> Dict[str, float]:

@@ -29,6 +29,19 @@ def train(cfg: ModelConfig, tc: TrainConfig, batches: Iterator[dict],
     state = init_train_state(key, params, tc, n_groups, n_pods)
     step_fn = jax.jit(make_train_step(cfg, tc, n_groups, n_pods))
 
+    if tc.sync.mode != "dense":
+        from repro.core.distributed import round_comm
+
+        cost = round_comm(tc.sync, cfg.param_count())
+        dense = 4.0 * cfg.param_count()
+        log.info("sync=%s: %.3f MB/round on the slow links (%.1fx vs dense "
+                 "fp32)%s, simulated %.2f ms/round on %s",
+                 tc.sync.mode, cost.inter_bytes / 1e6,
+                 dense / max(cost.inter_bytes, 1e-9),
+                 (f" + {cost.intra_bytes / 1e6:.1f} MB intra-pod"
+                  if cost.intra_bytes else ""),
+                 cost.time_s * 1e3, tc.sync.topology)
+
     history = []
     t0 = time.time()
     for step in range(steps):

@@ -1,0 +1,229 @@
+"""repro.comm: codec round-trips, ledger bookkeeping, topology simulation,
+pack kernels vs refs, and the HLO cross-check."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (CommLedger, Payload, analytic_bits, crosscheck_hlo,
+                        decode, encode, get_topology, round_cost)
+from repro.configs.base import SyncConfig
+from repro.core import compressors as C
+from repro.kernels import ops, ref
+
+
+def _all_compressors():
+    return [
+        C.identity(),
+        C.rand_k(0.25),
+        C.top_k(0.05),
+        C.block_top_k(0.1, block=64),
+        C.qsgd(8, 64),
+        C.qsgd(4, 64),
+        C.qsgd(8, 64, stochastic=False),
+        C.qsgd_sharded(8, 256),
+        C.qsgd_kernel(8),
+        C.mix_k(0.1, 0.3),
+        C.comp_k(0.1, 0.5),
+        C.scale_compressor(C.rand_k(0.25), 0.7),
+        C.scale_compressor(C.qsgd(8, 64), 0.5),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("comp", _all_compressors(), ids=lambda c: c.name)
+def test_roundtrip_exact_every_compressor(comp):
+    """decode(encode(x)) == compressor(x), elementwise exact."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1000,)) * 3
+    y = comp(key, x)
+    y_hat = decode(encode(comp, key, x))
+    assert bool(jnp.all(jnp.asarray(y) == jnp.asarray(y_hat)))
+
+
+@pytest.mark.parametrize("comp", [C.qsgd_sharded(8, 256), C.top_k(0.1),
+                                  C.qsgd_kernel(8)], ids=lambda c: c.name)
+def test_roundtrip_exact_2d(comp):
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, 256))
+    assert bool(jnp.all(comp(key, x) == decode(encode(comp, key, x))))
+
+
+def test_bitmap_scheme_roundtrip():
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(jax.random.PRNGKey(5), (777,))
+    comp = C.top_k(0.2)
+    p = encode(comp, key, x, scheme="sparse_bitmap")
+    assert bool(jnp.all(comp(key, x) == decode(p)))
+    # bitmap beats idx32 once k/d > 1/32
+    assert p.nbytes < encode(comp, key, x).nbytes
+
+
+def test_encoded_size_matches_analytic_model():
+    """Acceptance: top-k @ k/d=0.05 and qsgd int8 within 10% of payload_bits."""
+    key = jax.random.PRNGKey(0)
+    d = 1 << 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    for comp in (C.top_k(0.05), C.qsgd(8), C.qsgd_sharded(8, 256)):
+        p = encode(comp, key, x)
+        assert abs(8.0 * p.nbytes / analytic_bits(comp, d) - 1.0) <= 0.10, comp.name
+
+
+def test_payload_nbytes_is_plane_sum_and_ledger_agrees():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4096,))
+    comp = C.top_k(0.05)
+    p = encode(comp, key, x)
+    assert p.nbytes == sum(v.nbytes for v in p.planes.values())
+    led = CommLedger()
+    led.record_payload(0, "a->b", p)
+    assert led.total_bytes == p.nbytes
+    assert led.total_bits == p.nbits
+
+
+# ---------------------------------------------------------------------------
+# pack kernels vs refs (interpret mode)
+# ---------------------------------------------------------------------------
+def test_pack_mask_kernel_vs_ref():
+    from repro.kernels import bitpack
+
+    mask = (jax.random.uniform(jax.random.PRNGKey(0), (32, 256)) < 0.3)
+    mask = mask.astype(jnp.uint32)
+    words = bitpack.pack_mask_2d(mask)
+    np.testing.assert_array_equal(np.asarray(words),
+                                  np.asarray(ref.pack_mask_ref(mask)))
+    back = bitpack.unpack_mask_2d(words)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(ref.unpack_mask_ref(words)),
+                                  np.asarray(mask))
+
+
+@pytest.mark.parametrize("d", [31, 32, 1000, 32 * 128, 32 * 128 + 5])
+def test_pack_bits_roundtrip_flat(d):
+    mask = (jax.random.uniform(jax.random.PRNGKey(d), (d,)) < 0.1).astype(jnp.uint32)
+    words = ops.pack_bits(mask)
+    assert words.shape[0] == -(-d // 32)
+    np.testing.assert_array_equal(np.asarray(ops.unpack_bits(words, d)),
+                                  np.asarray(mask))
+
+
+def test_quant_pack_kernel_vs_ref():
+    from repro.kernels import bitpack, quant8
+
+    rows = quant8.TILE_ROWS * 2
+    x = jax.random.normal(jax.random.PRNGKey(0), (rows, quant8.QBLOCK)) * 7
+    noise = jax.random.uniform(jax.random.PRNGKey(1), x.shape)
+    q, scales = bitpack.quant_pack_2d(x, noise, bits=8)
+    qr, sr = ref.quant_pack_ref(x, noise, bits=8)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(sr), rtol=1e-7)
+    # unpack-dequant inverts to the fused quantize-dequantize carrier
+    dq = bitpack.unpack_dequant_2d(q, scales)
+    np.testing.assert_array_equal(
+        np.asarray(dq), np.asarray(ref.quant_dequant_ref(x, noise, bits=8)))
+
+
+def test_quantize_pack_matches_carrier():
+    """ops.quantize_pack planes dequantize to ops.quantize_dequantize exactly."""
+    x = jax.random.normal(jax.random.PRNGKey(7), (3000,)) * 4
+    key = jax.random.PRNGKey(8)
+    q, scales = ops.quantize_pack(x, key, bits=8)
+    np.testing.assert_array_equal(
+        np.asarray(ops.unpack_dequantize(q, scales, 3000)),
+        np.asarray(ops.quantize_dequantize(x, key, bits=8)))
+
+
+def test_nibble_pack_roundtrip():
+    q = jnp.asarray(np.random.default_rng(0).integers(-8, 8, size=333), jnp.int8)
+    packed = ops.nibble_pack(q)
+    assert packed.nbytes == (333 + 1) // 2
+    np.testing.assert_array_equal(np.asarray(ops.nibble_unpack(packed, 333)),
+                                  np.asarray(q))
+
+
+# ---------------------------------------------------------------------------
+# ledger
+# ---------------------------------------------------------------------------
+def test_ledger_aggregates():
+    led = CommLedger()
+    led.record(0, "a->b", 100, kind="intra", phase=0)
+    led.record(0, "b->c", 50, kind="inter", phase=1)
+    led.record(1, "a->b", 100, kind="intra", phase=0)
+    assert led.total_bytes == 250
+    assert led.n_rounds() == 2
+    assert led.bytes_by_round() == {0: 150, 1: 100}
+    assert led.bytes_by_kind() == {"intra": 200, "inter": 50}
+    assert led.bytes_by_link() == {"a->b": 200, "b->c": 50}
+    assert led.cumulative_bytes() == [150, 250]
+    assert led.bits_per_node(10) == 200.0
+
+
+def test_ledger_round_time_phases_serialize_links_parallel():
+    topo = get_topology("geo_wan")
+    led = CommLedger()
+    # two parallel intra links in phase 0, one inter link in phase 1
+    led.record(0, "w0->hub", 10_000, kind="intra", phase=0)
+    led.record(0, "w1->hub", 10_000, kind="intra", phase=0)
+    led.record(0, "hub->root", 10_000, kind="inter", phase=1)
+    t = led.round_time_s(topo, 0)
+    t_intra = topo.intra.time_s(10_000)
+    t_inter = topo.inter.time_s(10_000)
+    assert t == pytest.approx(t_intra + t_inter)  # phases add, links overlap
+    assert led.total_time_s(topo) == pytest.approx(t)
+
+
+def test_crosscheck_hlo_against_parser():
+    """Ledger totals audit against the HLO collective-bytes parser."""
+    from repro.launch.hlo_analysis import collective_bytes
+
+    hlo = "  %ar = f32[1000] all-reduce(f32[1000] %p), replica_groups={{0,1}}"
+    stats = collective_bytes(hlo)
+    led = CommLedger()
+    led.record(0, "allreduce", 4000, kind="intra")
+    chk = crosscheck_hlo(led, stats)
+    assert chk["consistent"] and chk["ratio"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# topology
+# ---------------------------------------------------------------------------
+def test_topology_presets_and_ring_model():
+    topo = get_topology("v5p_superpod")
+    assert topo.n_devices == 512
+    nb = 1 << 20
+    # ring all-reduce moves ~2x the buffer; must exceed a point-to-point send
+    assert topo.allreduce_time_s(nb, "intra") > topo.intra.time_s(nb)
+    # global (hierarchical) schedule is dominated by the slow inter ring
+    assert topo.allreduce_time_s(nb, "global") > topo.allreduce_time_s(nb, "intra")
+    with pytest.raises(KeyError):
+        get_topology("nope")
+    with pytest.raises(KeyError):
+        topo.link("sideways")
+
+
+def test_round_cost_hier_faster_than_dense_on_slow_links():
+    """Cohort-Squeeze's point: compressed + amortized inter-pod sync wins."""
+    n = 100_000
+    topo = get_topology("geo_wan")
+    dense = round_cost(SyncConfig(mode="dense"), n, topology=topo)
+    hier = round_cost(SyncConfig(mode="hier", compressor="qsgd", quant_bits=8,
+                                 sync_period=8), n, topology=topo)
+    assert hier.time_s < dense.time_s
+    assert hier.inter_bytes < dense.inter_bytes / 8
+
+
+# ---------------------------------------------------------------------------
+# compressor plumbing regressions (satellites)
+# ---------------------------------------------------------------------------
+def test_scale_compressor_keeps_flatten_and_wire():
+    base = C.qsgd_sharded(8, 256)
+    sc = C.scale_compressor(base, 0.5)
+    assert sc.flatten is False  # was silently reset to True before
+    assert sc.wire is not None and sc.wire.gain == pytest.approx(0.5)
+    # scaling twice composes the gain
+    assert C.scale_compressor(sc, 0.5).wire.gain == pytest.approx(0.25)
+    # and the scaled sharded compressor still preserves 2D shapes unflattened
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 256))
+    assert sc(jax.random.PRNGKey(1), x).shape == x.shape

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 container lacks hypothesis: deterministic shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.kernels import nm_prune as nmk
 from repro.kernels import ops, quant8, ref
@@ -23,8 +26,11 @@ def test_quant_shapes_dtypes(shape, dtype, bits):
     s = 2 ** (bits - 1) - 1
     flat = np.asarray(x, np.float32).reshape(-1)
     err = np.abs(np.asarray(out, np.float32).reshape(-1) - flat)
-    # error bounded by the global max scale (loose but dtype-safe)
-    assert err.max() <= np.abs(flat).max() / s + 1e-2
+    # error bounded by the global max scale plus the output dtype's own
+    # round-off of the dequantized value (bf16: eps = 2^-7)
+    dtype_eps = np.finfo(np.float32).eps if dtype == jnp.float32 else 2.0**-7
+    amax = np.abs(flat).max()
+    assert err.max() <= amax / s + amax * dtype_eps + 1e-2
 
 
 def test_quant_kernel_vs_oracle_exact():

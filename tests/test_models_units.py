@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 container lacks hypothesis: deterministic shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.models import attention as attn
 from repro.models import mamba as mamba_lib

@@ -104,7 +104,20 @@ def test_checkpoint_roundtrip(tmp_path, tiny_cfg):
 
 
 def test_bits_accounting():
+    # bits_per_round is now measured from encoded payloads (repro.comm): int8
+    # planes plus per-block scales — within 10% of the analytic 8 bits/dim
     sc = SyncConfig(mode="efbv", compressor="qsgd", quant_bits=8)
-    assert dist.bits_per_round(sc, 1000) == 8000
+    bits = dist.bits_per_round(sc, 1000)
+    assert abs(bits - 8000) <= 0.1 * 8000
     sc = SyncConfig(mode="hier", compressor="qsgd", quant_bits=8, sync_period=4)
-    assert dist.bits_per_round(sc, 1000) == 2000
+    assert abs(dist.bits_per_round(sc, 1000) - 2000) <= 0.1 * 2000
+
+
+def test_round_comm_report():
+    sc = SyncConfig(mode="hier", compressor="qsgd", quant_bits=8, sync_period=4)
+    cost = dist.round_comm(sc, 1000)
+    # hier: dense fp32 intra every step + amortized compressed inter
+    assert cost.intra_bytes == 4000
+    assert 0 < cost.inter_bytes < 4000 / 4
+    assert cost.time_s > 0
+    assert abs(cost.encoded_bits / cost.analytic_bits - 1.0) < 0.1
