@@ -1,36 +1,53 @@
 """repro.comm benchmark: codec sizes vs the analytic model, pack-kernel
-throughput, and topology-simulated round times per sync mode.
+throughput, topology-simulated round times per sync mode, and the streamed
+(pipelined) vs monolithic (serial) codec path.
 
 Rows:
-  comm_codec/<name>       encode+decode one 64k-dim payload; derived =
-                          encoded bytes (== CommLedger record), the ratio to
-                          the analytic payload_bits/8 model, and round-trip
-                          exactness vs the compressor output
-  comm_kernel/<name>      Pallas pack kernels (interpret mode) vs jnp refs
+  comm_codec/<name>       encode+decode one payload (warm-up + median of >=5
+                          repeats); derived = encoded bytes (== CommLedger
+                          record), the ratio to the analytic payload_bits/8
+                          model, and round-trip exactness
+  comm_stream/codec_*     encode_stream/decode_stream at several tile sizes;
+                          asserts chunked == monolithic bit-for-bit and that
+                          per-chunk ledger bytes sum to the payload
+  comm_stream/<preset>    simulated round time of the streamed pipeline vs
+                          the serial pack->send->unpack path (the acceptance
+                          row: >=2x on geo_wan at the default tile size)
+  comm_kernel/<name>      Pallas pack kernels (interpret mode) vs jnp refs,
+                          including the double-buffered streaming DMA ring
   comm_round/<mode>       per-round encoded bytes from the ledger + simulated
                           wall-clock on two topology presets (Cohort-Squeeze
                           'hier' shows the slow-link amortization)
+
+Smoke mode (env BENCH_SMOKE=1 or --smoke): tiny payloads, 1 repeat — used by
+CI so codec perf regressions fail loudly instead of silently.
 """
 from __future__ import annotations
 
-import time
+import os
+import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, timed
-from repro.comm import (CommLedger, analytic_bits, decode, encode,
-                        get_topology, round_cost)
+from repro.comm import (DEFAULT_TILE, DEFAULT_TILE_BYTES, CommLedger,
+                        analytic_bits, decode, decode_stream, encode,
+                        encode_stream, get_topology, round_cost,
+                        split_payload)
 from repro.configs.base import SyncConfig
 from repro.core import compressors as C
 
 D = 1 << 16
 
 
-def _codec_rows():
+def _smoke() -> bool:
+    return os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+
+def _codec_rows(d: int, repeats: int):
     key = jax.random.PRNGKey(0)
-    x = jax.random.normal(jax.random.PRNGKey(1), (D,))
+    x = jax.random.normal(jax.random.PRNGKey(1), (d,))
     cases = [
         ("identity", C.identity()),
         ("top_k(0.05)", C.top_k(0.05)),
@@ -42,43 +59,95 @@ def _codec_rows():
     ]
     rows = []
     for name, comp in cases:
-        t0 = time.perf_counter()
+        us = timed(lambda: decode(encode(comp, key, x)), repeats=repeats)
         p = encode(comp, key, x)
-        y_hat = decode(p)
-        us = (time.perf_counter() - t0) * 1e6
-        exact = bool(jnp.all(comp(key, x) == y_hat))
+        exact = bool(jnp.all(comp(key, x) == decode(p)))
         led = CommLedger()
         led.record_payload(0, "probe", p)
-        ratio = 8.0 * led.total_bytes / analytic_bits(comp, D)
+        ratio = 8.0 * led.total_bytes / analytic_bits(comp, d)
         rows.append((f"comm_codec/{name}", us,
                      f"bytes={led.total_bytes};vs_analytic={ratio:.3f};exact={exact}"))
     return rows
 
 
-def _kernel_rows():
-    from repro.kernels import ops, ref
+def _stream_codec_rows(d: int, repeats: int, tiles):
+    """Chunked encode/decode at several tile sizes, exactness asserted."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    comp = C.qsgd(8)
+    p = encode(comp, key, x)
+    y = decode(p)
+    rows = []
+    for tile in tiles:
+        us = timed(lambda: decode_stream(encode_stream(comp, key, x, tile=tile)),
+                   repeats=repeats)
+        sp = split_payload(p, tile)
+        led = CommLedger()
+        led.record_stream(0, "probe", sp)
+        exact = bool(jnp.all(decode_stream(sp) == y))
+        assert led.total_bytes == p.nbytes, (led.total_bytes, p.nbytes)
+        assert exact, tile
+        rows.append((f"comm_stream/codec_tile{tile}", us,
+                     f"bytes={led.total_bytes};chunks={sp.n_chunks};exact={exact}"))
+    return rows
+
+
+def _stream_time_rows():
+    """Streamed vs serial simulated round time (the acceptance comparison).
+
+    The payload is one federated client upload: a 100M-param model's qsgd
+    int8 delta (~100 MB) on each preset's slow link at the default tile.
+    """
+    n_params = 100_000_000
+    sync = SyncConfig(mode="efbv", compressor="qsgd", quant_bits=8)
+    from repro.comm import measured_payload_bits
+
+    nbytes = measured_payload_bits(sync, n_params) / 8.0
+    rows = []
+    for preset in ("geo_wan", "v5p_superpod", "edge_fl"):
+        link = get_topology(preset).inter
+        t_serial = link.serial_codec_time_s(nbytes)
+        t_stream = link.stream_time_s(nbytes, DEFAULT_TILE_BYTES)
+        rows.append((f"comm_stream/{preset}_upload", t_stream * 1e6,
+                     f"bytes={int(nbytes)};serial_ms={t_serial*1e3:.1f};"
+                     f"stream_ms={t_stream*1e3:.1f};"
+                     f"speedup={t_serial/t_stream:.2f}"))
+    return rows
+
+
+def _kernel_rows(d: int, repeats: int):
+    from repro.kernels import ops
 
     rows = []
-    mask = (jax.random.uniform(jax.random.PRNGKey(2), (D,)) < 0.05)
-    us = timed(lambda: jax.block_until_ready(ops.pack_bits(mask)))
+    mask = (jax.random.uniform(jax.random.PRNGKey(2), (d,)) < 0.05)
+    us = timed(lambda: jax.block_until_ready(ops.pack_bits(mask)),
+               repeats=repeats)
     words = ops.pack_bits(mask)
-    ok = bool(jnp.all(ops.unpack_bits(words, D) == mask.astype(jnp.uint32)))
+    ok = bool(jnp.all(ops.unpack_bits(words, d) == mask.astype(jnp.uint32)))
     rows.append(("comm_kernel/pack_bits", us,
                  f"words={words.shape[0]};roundtrip={ok}"))
 
-    x = jax.random.normal(jax.random.PRNGKey(3), (D,)) * 5
+    x = jax.random.normal(jax.random.PRNGKey(3), (d,)) * 5
     key = jax.random.PRNGKey(4)
-    us = timed(lambda: jax.block_until_ready(ops.quantize_pack(x, key)[0]))
+    us = timed(lambda: jax.block_until_ready(ops.quantize_pack(x, key)[0]),
+               repeats=repeats)
     q, scales = ops.quantize_pack(x, key)
-    dq = ops.unpack_dequantize(q, scales, D)
+    dq = ops.unpack_dequantize(q, scales, d)
     carrier = ops.quantize_dequantize(x, key)
     ok = bool(jnp.all(dq == carrier.reshape(-1)))
     rows.append(("comm_kernel/quantize_pack", us,
                  f"plane_bytes={q.size + 4 * scales.size};matches_carrier={ok}"))
+
+    us = timed(lambda: jax.block_until_ready(ops.stream_quantize_pack(x, key)[0]),
+               repeats=repeats)
+    qs, ss = ops.stream_quantize_pack(x, key)
+    ok = bool(jnp.all(qs == q)) and bool(jnp.all(ss == scales))
+    rows.append(("comm_kernel/stream_quantize_pack", us,
+                 f"plane_bytes={qs.size + 4 * ss.size};matches_monolithic={ok}"))
     return rows
 
 
-def _round_rows():
+def _round_rows(repeats: int):
     n_params = 25_000_000  # ~100 MB fp32 model
     rows = []
     for label, sync in [
@@ -89,24 +158,31 @@ def _round_rows():
         ("hier_qsgd8_p8", SyncConfig(mode="hier", compressor="qsgd",
                                      quant_bits=8, sync_period=8)),
     ]:
-        t0 = time.perf_counter()
+        us = timed(lambda: round_cost(sync, n_params), repeats=repeats)
         cost = round_cost(sync, n_params)
-        us = (time.perf_counter() - t0) * 1e6
-        t_wan = round_cost(sync, n_params,
-                           topology=get_topology("geo_wan")).time_s
+        wan = round_cost(sync, n_params, topology=get_topology("geo_wan"))
         ratio = cost.encoded_bits / cost.analytic_bits if cost.analytic_bits else 0
         rows.append((f"comm_round/{label}", us,
                      f"MB={cost.total_bytes/1e6:.2f};vs_analytic={ratio:.3f};"
-                     f"t_v5p={cost.time_s*1e3:.2f}ms;t_wan={t_wan*1e3:.1f}ms"))
+                     f"t_v5p={cost.time_s*1e3:.2f}ms;t_wan={wan.time_s*1e3:.1f}ms;"
+                     f"t_wan_serial={wan.serial_time_s*1e3:.1f}ms"))
     return rows
 
 
-def run():
-    return _codec_rows() + _kernel_rows() + _round_rows()
+def run(smoke: bool = False):
+    smoke = smoke or _smoke()
+    d = 1 << 13 if smoke else D
+    repeats = 1 if smoke else 5
+    # smoke tiles still split the payload (qsgd blocks are 2048 coords wide)
+    tiles = ((2048, 4096) if smoke
+             else (DEFAULT_TILE // 4, DEFAULT_TILE, DEFAULT_TILE * 4))
+    return (_codec_rows(d, repeats) + _stream_codec_rows(d, repeats, tiles)
+            + _stream_time_rows() + _kernel_rows(d, repeats)
+            + _round_rows(repeats))
 
 
 def main():
-    emit(run())
+    emit(run(smoke="--smoke" in sys.argv[1:]))
 
 
 if __name__ == "__main__":

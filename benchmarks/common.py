@@ -7,8 +7,14 @@ from typing import Callable, List, Tuple
 Row = Tuple[str, float, str]
 
 
-def timed(fn: Callable, repeats: int = 3) -> float:
-    """Median wall-time per call in microseconds."""
+def timed(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds.
+
+    ``warmup`` calls run first and are discarded so JIT/trace cost doesn't
+    pollute the median (codec rows used to time a single cold call).
+    """
+    for _ in range(max(0, warmup)):
+        fn()
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()

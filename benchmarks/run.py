@@ -3,11 +3,33 @@
 Prints ``name,us_per_call,derived`` CSV rows.  The §Roofline harness
 (benchmarks/roofline.py) and the multi-pod dry-run (repro.launch.dryrun) are
 separate long-running entries — this file covers the paper-table benchmarks.
+
+The comm rows are additionally written to ``BENCH_comm.json`` (machine-
+readable: name, wall-us, bytes) so the codec/transport perf trajectory is
+tracked across PRs instead of living only in stdout.
 """
 from __future__ import annotations
 
+import json
+import os
+import re
 import sys
 import time
+
+_BYTES_RE = re.compile(r"(?:^|;)bytes=(\d+)")
+
+
+def write_comm_json(rows, path: str = "BENCH_comm.json") -> None:
+    """Persist comm benchmark rows: [{name, us, bytes|null, derived}]."""
+    out = []
+    for name, us, derived in rows:
+        m = _BYTES_RE.search(derived)
+        out.append({"name": name, "us": round(float(us), 1),
+                    "bytes": int(m.group(1)) if m else None,
+                    "derived": derived})
+    with open(path, "w") as f:
+        json.dump({"rows": out}, f, indent=1)
+        f.write("\n")
 
 
 def main() -> None:
@@ -30,7 +52,12 @@ def main() -> None:
     for label, mod in modules:
         t0 = time.time()
         try:
-            emit(mod.run())
+            rows = mod.run()
+            emit(rows)
+            if mod is bench_comm:
+                path = os.environ.get("BENCH_COMM_JSON", "BENCH_comm.json")
+                write_comm_json(rows, path)
+                print(f"# comm rows -> {path}", file=sys.stderr)
         except Exception as e:  # noqa: BLE001 — keep the suite going
             print(f"{label}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
         print(f"# {label} done in {time.time()-t0:.1f}s", file=sys.stderr)

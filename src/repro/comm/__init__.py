@@ -3,24 +3,44 @@ link-topology simulator.
 
 Layers:
   codecs      encode/decode packed payloads for every compressor family;
-              decode(encode(x)) == compressor(x) bit-for-bit
+              decode(encode(x)) == compressor(x) bit-for-bit; the streaming
+              variants (encode_stream/decode_stream) split the same planes
+              into per-tile chunks a pipelined transport ships
+  buckets     bucket fusion: flatten a sync pytree into fixed-size fp32
+              buckets so one fused compressor/codec pass replaces the
+              per-leaf kernel loop
   ledger      CommLedger: per-round, per-link encoded byte records — the one
-              audited source of truth for bits-on-the-wire
+              audited source of truth for bits-on-the-wire (streamed chunks
+              get one record each, summing exactly to the payload)
   topology    Link/Topology: cross-device vs cross-pod bandwidth/latency,
-              ring-collective timing, presets (TPU superpod / WAN / edge FL)
-  accounting  RoundCost per sync mode (measured, amortized, simulated time);
-              backs distributed.bits_per_round
+              ring-collective timing, presets (TPU superpod / WAN / edge FL),
+              and the pipelined (pack | send | unpack overlapped) round-time
+              model for streamed codecs
+  accounting  RoundCost per sync mode (measured, amortized, simulated serial
+              + streamed time); backs distributed.bits_per_round
 """
 from repro.comm.accounting import (RoundCost, measured_payload_bits,
                                    round_bits, round_cost)
-from repro.comm.codecs import (Payload, analytic_bits, decode, encode,
-                               encoded_bits, roundtrip_equal)
+from repro.comm.buckets import (DEFAULT_BUCKET_SIZE, BucketLayout, bucketize,
+                                bucketize_groups, debucketize,
+                                debucketize_groups)
+from repro.comm.codecs import (DEFAULT_TILE, Chunk, Payload, StreamPayload,
+                               analytic_bits, decode, decode_stream, encode,
+                               encode_stream, encoded_bits, roundtrip_equal,
+                               split_payload, stream_roundtrip_equal)
 from repro.comm.ledger import CommLedger, CommRecord, crosscheck_hlo
-from repro.comm.topology import PRESETS, Link, Topology, get_topology
+from repro.comm.topology import (DEFAULT_PROFILE, DEFAULT_TILE_BYTES, PRESETS,
+                                 CodecProfile, Link, Topology, get_topology,
+                                 pipelined_time_s)
 
 __all__ = [
-    "Payload", "encode", "decode", "encoded_bits", "analytic_bits",
-    "roundtrip_equal", "CommLedger", "CommRecord", "crosscheck_hlo",
-    "Link", "Topology", "PRESETS", "get_topology",
+    "Payload", "Chunk", "StreamPayload", "encode", "decode", "encode_stream",
+    "decode_stream", "split_payload", "encoded_bits", "analytic_bits",
+    "roundtrip_equal", "stream_roundtrip_equal", "DEFAULT_TILE",
+    "BucketLayout", "bucketize", "bucketize_groups", "debucketize",
+    "debucketize_groups", "DEFAULT_BUCKET_SIZE",
+    "CommLedger", "CommRecord", "crosscheck_hlo",
+    "Link", "Topology", "PRESETS", "get_topology", "CodecProfile",
+    "pipelined_time_s", "DEFAULT_PROFILE", "DEFAULT_TILE_BYTES",
     "RoundCost", "round_cost", "round_bits", "measured_payload_bits",
 ]

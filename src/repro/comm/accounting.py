@@ -18,7 +18,8 @@ from typing import Optional
 import jax
 
 from repro.comm import codecs
-from repro.comm.topology import Topology, get_topology
+from repro.comm.topology import (DEFAULT_PROFILE, DEFAULT_TILE_BYTES,
+                                 CodecProfile, Topology, get_topology)
 
 PROBE_CAP = 1 << 20  # max coordinates actually encoded when sizing a round
 
@@ -30,13 +31,20 @@ class RoundCost:
     n_params: int
     intra_bytes: float       # fast-fabric bytes per device per round
     inter_bytes: float       # slow-link bytes per device per round
-    time_s: float            # simulated wall-clock of the round
+    time_s: float            # simulated wall-clock of the round (streamed
+                             # pipeline when tile_bytes > 0, else serial)
     encoded_bits: float      # per-node payload bits per round (amortized)
     analytic_bits: float     # the seed's closed-form model (cross-check)
+    serial_time_s: float = 0.0   # monolithic pack -> send -> unpack wall-clock
+    tile_bytes: int = 0          # streamed transport tile (0 = monolithic)
 
     @property
     def total_bytes(self) -> float:
         return self.intra_bytes + self.inter_bytes
+
+    @property
+    def stream_speedup(self) -> float:
+        return self.serial_time_s / self.time_s if self.time_s > 0 else 1.0
 
 
 def measured_payload_bits(sync, n_params: int, key=None) -> float:
@@ -52,7 +60,7 @@ def measured_payload_bits(sync, n_params: int, key=None) -> float:
 
 
 def round_cost(sync, n_params: int, topology: Optional[Topology] = None,
-               key=None) -> RoundCost:
+               key=None, profile: Optional[CodecProfile] = None) -> RoundCost:
     """Per-round, per-worker communication of one sync mode.
 
     dense       every round: full fp32 payload on the slow links
@@ -60,11 +68,18 @@ def round_cost(sync, n_params: int, topology: Optional[Topology] = None,
     local       full fp32 payload every sync_period rounds (amortized)
     hier        dense fp32 intra-pod every round + encoded compressed delta
                 inter-pod every sync_period rounds (Cohort-Squeeze)
+
+    Compressed payloads pay the codec: ``serial_time_s`` is the monolithic
+    pack -> collective -> unpack sum; ``time_s`` is the streamed pipeline
+    (``SyncConfig.stream_tile_bytes``-sized tiles overlapping the three
+    stages) when streaming is enabled, otherwise the serial time.
     """
     from repro.core.distributed import build_compressor
 
     topo = topology or get_topology(getattr(sync, "topology", "v5p_superpod"))
     period = max(1, sync.sync_period)
+    tile_bytes = int(getattr(sync, "stream_tile_bytes", DEFAULT_TILE_BYTES))
+    prof = profile or DEFAULT_PROFILE
     dense_bytes = 4.0 * n_params
     if sync.mode in ("dense", "local"):
         enc_bits = 32.0 * n_params  # fp32 on the wire, no compressor
@@ -72,23 +87,34 @@ def round_cost(sync, n_params: int, topology: Optional[Topology] = None,
         enc_bits = measured_payload_bits(sync, n_params, key=key)
     enc_bytes = enc_bits / 8.0
 
+    def _enc_times(nbytes, scope):
+        """(serial, streamed) wall-clock of one encoded collective."""
+        serial = topo.allreduce_serial_time_s(nbytes, scope, prof)
+        if tile_bytes <= 0:
+            return serial, serial
+        return serial, topo.allreduce_stream_time_s(nbytes, scope, tile_bytes,
+                                                    prof)
+
     if sync.mode == "dense":
         intra, inter = 0.0, dense_bytes
-        time_s = topo.allreduce_time_s(dense_bytes, scope="global")
+        serial_s = stream_s = topo.allreduce_time_s(dense_bytes, scope="global")
         bits = 8.0 * dense_bytes
     elif sync.mode in ("efbv", "ef21", "diana"):
         intra, inter = 0.0, enc_bytes
-        time_s = topo.allreduce_time_s(enc_bytes, scope="global")
+        serial_s, stream_s = _enc_times(enc_bytes, "global")
         bits = enc_bits
     elif sync.mode == "local":
         intra, inter = 0.0, dense_bytes / period
-        time_s = topo.allreduce_time_s(dense_bytes, scope="global") / period
+        serial_s = stream_s = (
+            topo.allreduce_time_s(dense_bytes, scope="global") / period)
         bits = 8.0 * dense_bytes / period
     elif sync.mode == "hier":
         intra = dense_bytes
         inter = enc_bytes / period
-        time_s = (topo.allreduce_time_s(dense_bytes, scope="intra")
-                  + topo.allreduce_time_s(enc_bytes, scope="inter") / period)
+        t_intra = topo.allreduce_time_s(dense_bytes, scope="intra")
+        t_ser, t_str = _enc_times(enc_bytes, "inter")
+        serial_s = t_intra + t_ser / period
+        stream_s = t_intra + t_str / period
         bits = enc_bits / period
     else:
         raise KeyError(f"unknown sync mode {sync.mode!r}")
@@ -101,7 +127,14 @@ def round_cost(sync, n_params: int, topology: Optional[Topology] = None,
         analytic = 32.0 * n_params / period
     if sync.mode == "dense":
         analytic = 32.0 * n_params  # fp32, no compressor on the wire
-    return RoundCost(sync.mode, n_params, intra, inter, time_s, bits, analytic)
+    # codec-free modes (dense/local fp32 wires) have nothing to stream:
+    # report tile_bytes=0 so consumers don't claim a pipeline that isn't there
+    if sync.mode in ("dense", "local"):
+        tile_bytes = 0
+    return RoundCost(sync.mode, n_params, intra, inter,
+                     stream_s if tile_bytes > 0 else serial_s,
+                     bits, analytic, serial_time_s=serial_s,
+                     tile_bytes=max(0, tile_bytes))
 
 
 def round_bits(sync, n_params: int) -> float:

@@ -1,0 +1,115 @@
+"""Bucket fusion: flatten a gradient/delta pytree into fixed-size fp32 buckets.
+
+The per-leaf sync loops in ``core/distributed.py`` launched one compressor
+kernel per pytree leaf — dozens of tiny XLA programs for a transformer's
+parameter tree.  Bucketing concatenates every leaf into one flat fp32 vector,
+pads it to a whole number of fixed-size buckets, and views it as an
+``(n_buckets, bucket_size)`` matrix, so the whole tree is compressed/encoded
+in a single fused pass and the streaming codecs (``codecs.encode_stream``)
+can treat one bucket as one wire tile.
+
+``DEFAULT_BUCKET_SIZE`` is a multiple of every codec granule in the repo
+(quantizer blocks 256/512/2048, the 32-bit mask words, the Pallas QBLOCK), so
+bucket boundaries always align with wire-chunk boundaries.
+
+Layouts are shape-only metadata (hashable, jit-static); bucketize/debucketize
+are pure reshape/concat/pad, so round-trips are value-exact in every dtype.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BUCKET_SIZE = 1 << 16  # coords per bucket; multiple of all codec granules
+
+
+@dataclass(frozen=True)
+class BucketLayout:
+    """Where each leaf lives inside the flat bucketed vector."""
+    treedef: object
+    shapes: Tuple[tuple, ...]    # per-leaf shapes (group axis excluded)
+    dtypes: Tuple[str, ...]      # per-leaf dtypes (restored by debucketize)
+    sizes: Tuple[int, ...]
+    offsets: Tuple[int, ...]     # start coordinate of each leaf
+    d: int                       # total coordinates (sum of sizes)
+    bucket_size: int
+
+    @property
+    def n_buckets(self) -> int:
+        return max(1, -(-self.d // self.bucket_size))
+
+    @property
+    def padded_d(self) -> int:
+        return self.n_buckets * self.bucket_size
+
+
+def _layout(leaves, treedef, bucket_size: int, group_axis: bool) -> BucketLayout:
+    shapes = tuple(tuple(l.shape[1:] if group_axis else l.shape) for l in leaves)
+    sizes = tuple(_prod(s) for s in shapes)
+    offsets, acc = [], 0
+    for s in sizes:
+        offsets.append(acc)
+        acc += s
+    return BucketLayout(treedef, shapes, tuple(str(l.dtype) for l in leaves),
+                        sizes, tuple(offsets), acc, int(bucket_size))
+
+
+def _prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def bucketize(tree, bucket_size: int = DEFAULT_BUCKET_SIZE):
+    """Pytree -> ((n_buckets, bucket_size) float32, BucketLayout)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    layout = _layout(leaves, treedef, bucket_size, group_axis=False)
+    flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves])
+    pad = layout.padded_d - layout.d
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(layout.n_buckets, layout.bucket_size), layout
+
+
+def bucketize_groups(tree_g, bucket_size: int = DEFAULT_BUCKET_SIZE):
+    """Pytree with leading group axis G -> ((G, n_buckets, bucket_size)
+    float32, BucketLayout).  The layout describes the per-group view (group
+    axis excluded), so it is shared with the groupless ``bucketize`` of the
+    matching replicated tree (e.g. h_bar next to h)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree_g)
+    layout = _layout(leaves, treedef, bucket_size, group_axis=True)
+    G = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [l.astype(jnp.float32).reshape(G, -1) for l in leaves], axis=1)
+    pad = layout.padded_d - layout.d
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return flat.reshape(G, layout.n_buckets, layout.bucket_size), layout
+
+
+def debucketize(buckets, layout: BucketLayout, dtype=None):
+    """Inverse of ``bucketize``; ``dtype`` overrides the recorded leaf dtypes
+    (the sync states keep everything float32 regardless of the param dtype)."""
+    flat = buckets.reshape(-1)[: layout.d]
+    leaves = []
+    for shape, dt, size, off in zip(layout.shapes, layout.dtypes,
+                                    layout.sizes, layout.offsets):
+        leaf = flat[off: off + size].reshape(shape)
+        leaves.append(leaf.astype(dtype or dt))
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)
+
+
+def debucketize_groups(buckets_g, layout: BucketLayout, dtype=None):
+    """Inverse of ``bucketize_groups`` (leading group axis preserved)."""
+    G = buckets_g.shape[0]
+    flat = buckets_g.reshape(G, -1)[:, : layout.d]
+    leaves = []
+    for shape, dt, size, off in zip(layout.shapes, layout.dtypes,
+                                    layout.sizes, layout.offsets):
+        leaf = flat[:, off: off + size].reshape((G,) + shape)
+        leaves.append(leaf.astype(dtype or dt))
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)

@@ -66,19 +66,46 @@ class Payload:
 # bit-stream helpers (little-endian, numpy — host-side transport packing)
 # ---------------------------------------------------------------------------
 def _pack_uint_stream(vals: np.ndarray, nbits: int) -> np.ndarray:
-    """Pack unsigned ints < 2**nbits into a little-endian uint8 stream."""
-    if vals.size == 0:
+    """Pack unsigned ints < 2**nbits into a little-endian uint8 stream.
+
+    Word-wise: value i's bits land at bit offset i*nbits, so after shifting
+    each value by its in-byte offset it spans at most ceil(nbits/8)+1 bytes;
+    the scatter-or below runs that many vectorized passes instead of
+    materializing the (n, nbits) uint8 bit matrix the old packbits path built.
+    """
+    n = int(vals.size)
+    if n == 0:
         return np.zeros((0,), np.uint8)
-    bits = ((vals[:, None].astype(np.uint64) >> np.arange(nbits, dtype=np.uint64))
-            & 1).astype(np.uint8).reshape(-1)
-    return np.packbits(bits, bitorder="little")
+    assert nbits <= 56, nbits  # shifted value must fit in a uint64
+    total = (n * nbits + 7) >> 3
+    bitpos = np.arange(n, dtype=np.int64) * nbits
+    byte0 = bitpos >> 3
+    # truncate to nbits like the old per-bit path did — an out-of-range value
+    # must not scatter-OR stray bits into its neighbors' bytes
+    vals = vals.astype(np.uint64) & np.uint64((1 << nbits) - 1)
+    shifted = vals << (bitpos & 7).astype(np.uint64)
+    out = np.zeros(total, np.uint8)
+    for b in range(((nbits + 7) >> 3) + 1):
+        byte = byte0 + b
+        valid = byte < total
+        contrib = ((shifted >> np.uint64(8 * b)) & np.uint64(0xFF)).astype(np.uint8)
+        np.bitwise_or.at(out, byte[valid], contrib[valid])
+    return out
 
 
 def _unpack_uint_stream(buf: np.ndarray, n: int, nbits: int) -> np.ndarray:
     if n == 0:
         return np.zeros((0,), np.int64)
-    bits = np.unpackbits(buf, bitorder="little")[: n * nbits].reshape(n, nbits)
-    return (bits.astype(np.int64) << np.arange(nbits, dtype=np.int64)).sum(axis=1)
+    assert nbits <= 56, nbits
+    spans = ((nbits + 7) >> 3) + 1
+    bufp = np.concatenate([buf, np.zeros(spans, np.uint8)])  # tail gathers
+    bitpos = np.arange(n, dtype=np.int64) * nbits
+    byte0 = bitpos >> 3
+    acc = np.zeros(n, np.uint64)
+    for b in range(spans):
+        acc |= bufp[byte0 + b].astype(np.uint64) << np.uint64(8 * b)
+    acc >>= (bitpos & 7).astype(np.uint64)
+    return (acc & np.uint64((1 << nbits) - 1)).astype(np.int64)
 
 
 # ---------------------------------------------------------------------------
@@ -250,12 +277,16 @@ def _encode_quant(y, x, spec: WireSpec, key) -> Payload:
 
         q, scales = ops.quantize_pack(jnp.asarray(x), key, bits=spec.bits)
         d = int(np.prod(np.shape(x)))
+        kept = _q_keep(d, q.shape)
+        rows_used = kept // q.shape[1]
+        # the kernel plane is TILE_ROWS-padded; ship only rows that carry data
+        # (q AND scales — padding rows' scales are the filler 1.0, dead weight)
         return Payload(
             "quant", tuple(np.shape(x)), str(np.asarray(x).dtype),
-            {"q": _store_q(np.asarray(q).reshape(-1)[: _q_keep(d, q.shape)], spec.bits),
-             "scales": np.asarray(scales, np.float32).reshape(-1)},
+            {"q": _store_q(np.asarray(q).reshape(-1)[:kept], spec.bits),
+             "scales": np.asarray(scales, np.float32).reshape(-1)[:rows_used]},
             {"bits": spec.bits, "axis": "kernel", "gain": spec.gain,
-             "rows": q.shape[0], "qblock": q.shape[1], "d": d})
+             "rows": rows_used, "qblock": q.shape[1], "d": d})
     # derive the integer plane from the dense carrier: y = gain * q * scale,
     # so rint(y / (gain * scale)) recovers q exactly (error << 0.5)
     scale, shaped = _quant_scales(x, spec)
@@ -312,6 +343,196 @@ def _decode_quant(p: Payload):
     if p.meta["axis"] == "last":
         return jnp.asarray(out.reshape(p.shape)).astype(p.dtype)
     return jnp.asarray(out.reshape(-1)[:d].reshape(p.shape)).astype(p.dtype)
+
+
+# ---------------------------------------------------------------------------
+# streaming (chunked) codecs
+# ---------------------------------------------------------------------------
+# One Chunk is the wire unit of the overlapped transport: the payload planes
+# restricted to a tile of the flat coordinate space.  Chunks PARTITION the
+# monolithic planes — concatenating them restores every plane byte-for-byte,
+# so chunked decode equals whole-payload decode exactly and per-chunk ledger
+# bytes sum exactly to the monolithic ``Payload.nbytes``.  Tile boundaries are
+# aligned to each scheme's natural granule (quantizer block, QBLOCK rows,
+# 32-bit mask words), matching the bucket layout in ``comm/buckets.py``.
+
+DEFAULT_TILE = 1 << 14  # coordinates per streamed chunk
+
+
+@dataclass
+class Chunk:
+    """Plane slices for one tile in flight; [start, stop) is the flat
+    coordinate range the tile carries.  Value/index/count/scale planes are
+    cut at true coordinate boundaries; the two bit-granular streams follow
+    the byte stream instead of coordinates (sparse_block's packed indices
+    split at the nearest byte, and sparse_bitmap's words keep the pack
+    kernel's stride-W interleaved bit order), so chunks always PARTITION the
+    monolithic planes exactly but those two planes only reassemble on
+    concatenation — ``decode_stream`` — not per-chunk in isolation."""
+    index: int
+    start: int
+    stop: int
+    planes: Dict[str, np.ndarray]
+
+    @property
+    def nbytes(self) -> int:
+        return int(sum(p.nbytes for p in self.planes.values()))
+
+    @property
+    def nbits(self) -> int:
+        return 8 * self.nbytes
+
+
+@dataclass
+class StreamPayload:
+    """A payload split into per-tile chunks (same wire format, streamed)."""
+    scheme: str
+    shape: tuple
+    dtype: str
+    tile: int
+    chunks: list
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.chunks)
+
+    @property
+    def nbytes(self) -> int:
+        return int(sum(ch.nbytes for ch in self.chunks))
+
+    @property
+    def nbits(self) -> int:
+        return 8 * self.nbytes
+
+
+def _stream_granule(p: Payload) -> int:
+    """Smallest coordinate step a chunk boundary may take for this scheme."""
+    if p.scheme == "sparse_block":
+        return p.meta["block"]
+    if p.scheme == "sparse_bitmap":
+        return 32
+    if p.scheme == "quant":
+        if p.meta["axis"] == "kernel":
+            g = p.meta["qblock"]
+        else:
+            qshape = p.meta["qshape"]
+            nsc = max(1, int(np.prod(p.meta["scale_shape"])))
+            blocked = nsc * qshape[-1] == int(np.prod(qshape))
+            g = qshape[-1] if blocked else 1
+        if p.meta["bits"] <= 4 and g % 2:
+            g *= 2  # nibble-packed plane: keep chunk splits byte-aligned
+        return g
+    return 1
+
+
+def _quant_scale_offsets(p: Payload, elem_off: np.ndarray) -> np.ndarray:
+    nsc = p.planes["scales"].shape[0]
+    if p.meta["axis"] == "kernel":
+        block = p.meta["qblock"]
+    else:
+        qshape = p.meta["qshape"]
+        blocked = nsc * qshape[-1] == int(np.prod(qshape))
+        if not blocked:  # single global scale rides with the last chunk
+            out = np.full(elem_off.shape, nsc, np.int64)
+            out[:-1] = 0
+            return out
+        block = qshape[-1]
+    out = np.minimum(elem_off // block, nsc)
+    out[-1] = nsc
+    return out
+
+
+def _plane_offsets(p: Payload, tile: int, n: int) -> Dict[str, np.ndarray]:
+    """Per-plane split offsets (length n+1, monotone, 0 .. plane length)."""
+    d = int(np.prod(p.shape)) if p.shape else 1
+    coord = np.minimum(np.arange(n + 1, dtype=np.int64) * tile, d)
+    if p.scheme == "dense":
+        return {"values": coord}
+    if p.scheme == "sparse_idx32":
+        pos = np.searchsorted(p.planes["indices"].astype(np.int64), coord)
+        return {"indices": pos, "values": pos}
+    if p.scheme == "sparse_block":
+        block, nbits = p.meta["block"], p.meta["nbits"]
+        nb = p.planes["block_counts"].shape[0]
+        blocks = np.minimum(np.arange(n + 1, dtype=np.int64) * (tile // block), nb)
+        blocks[-1] = nb
+        kept = np.concatenate(
+            [[0], np.cumsum(p.planes["block_counts"].astype(np.int64))])[blocks]
+        stream_len = p.planes["local_indices"].shape[0]
+        # the bitpacked index stream splits at byte granularity: a straddled
+        # byte rides with the later chunk, concatenation is still exact
+        sbytes = np.minimum((kept * nbits) >> 3, stream_len)
+        sbytes[-1] = stream_len
+        return {"local_indices": sbytes, "values": kept, "block_counts": blocks}
+    if p.scheme == "sparse_bitmap":
+        W = p.planes["mask_words"].shape[0]
+        words = np.minimum(np.arange(n + 1, dtype=np.int64) * (tile // 32), W)
+        words[-1] = W
+        # flat-order mask straight from the words (pack_bits stride-W order:
+        # bit j of word w is mask[j*W + w]) — no interpret-mode kernel launch
+        bits = np.unpackbits(
+            np.ascontiguousarray(p.planes["mask_words"]).view(np.uint8),
+            bitorder="little").reshape(W, 32)
+        mask = bits.T.reshape(-1)[: p.meta["d"]]
+        kept = np.concatenate([[0], np.cumsum(mask.astype(np.int64))])[coord]
+        return {"mask_words": words, "values": kept}
+    if p.scheme == "quant":
+        qlen = p.planes["q"].shape[0]
+        if p.meta["bits"] <= 4:
+            qoff = np.minimum(coord >> 1, qlen)  # two values per byte
+        else:
+            qoff = np.minimum(coord, qlen)
+        qoff = qoff.copy()
+        qoff[-1] = qlen  # padded / straddling tail rides with the last chunk
+        return {"q": qoff, "scales": _quant_scale_offsets(p, coord)}
+    raise ValueError(f"unknown wire scheme {p.scheme!r}")
+
+
+def split_payload(p: Payload, tile: int = DEFAULT_TILE) -> StreamPayload:
+    """Partition a monolithic payload into per-tile chunks (exact: chunk
+    bytes sum to ``p.nbytes`` and concatenation restores every plane)."""
+    d = int(np.prod(p.shape)) if p.shape else 1
+    g = _stream_granule(p)
+    tile = max(g, (int(tile) // g) * g)
+    n = max(1, -(-d // tile))
+    offs = _plane_offsets(p, tile, n)
+    chunks = []
+    for t in range(n):
+        planes = {k: v[int(offs[k][t]): int(offs[k][t + 1])]
+                  for k, v in p.planes.items()}
+        chunks.append(Chunk(t, min(t * tile, d), min((t + 1) * tile, d), planes))
+    sp = StreamPayload(p.scheme, p.shape, p.dtype, tile, chunks, dict(p.meta))
+    assert sp.nbytes == p.nbytes, (sp.nbytes, p.nbytes, p.scheme)
+    return sp
+
+
+def encode_stream(c: Compressor, key, x, tile: int = DEFAULT_TILE,
+                  scheme: Optional[str] = None) -> StreamPayload:
+    """Compress + pack ``x`` as per-tile chunks a streaming transport ships.
+
+    One fused compressor/codec pass produces the planes and the partition
+    attributes them to tiles so pack, send, and unpack overlap.  (The
+    double-buffered ring in ``kernels/stream.py`` demonstrates the on-device
+    tile-granular producer for the quant scheme — bit-identical planes — but
+    this host-side path packs monolithically via ``ops.quantize_pack``.)
+    """
+    return split_payload(encode(c, key, x, scheme=scheme), tile)
+
+
+def decode_stream(sp: StreamPayload):
+    """Reassemble the chunk planes and decode — bit-exact vs ``decode``."""
+    chunks = sorted(sp.chunks, key=lambda ch: ch.index)
+    planes = {k: np.concatenate([ch.planes[k] for ch in chunks])
+              for k in chunks[0].planes}
+    return decode(Payload(sp.scheme, sp.shape, sp.dtype, planes, dict(sp.meta)))
+
+
+def stream_roundtrip_equal(c: Compressor, key, x, tile: int = DEFAULT_TILE) -> bool:
+    """decode_stream(encode_stream(x)) == compressor(x), elementwise exact."""
+    y = c(key, x)
+    y_hat = decode_stream(encode_stream(c, key, x, tile=tile))
+    return bool(jnp.all(jnp.asarray(y) == jnp.asarray(y_hat)))
 
 
 # ---------------------------------------------------------------------------

@@ -36,6 +36,7 @@ class CommRecord:
     nbytes: int
     phase: int = 0
     tag: str = ""
+    chunk: int = -1  # streamed-tile index (-1 = whole-payload message)
 
 
 @dataclass
@@ -44,8 +45,9 @@ class CommLedger:
 
     # -- recording ----------------------------------------------------------
     def record(self, round: int, link: str, nbytes, kind: str = "inter",
-               phase: int = 0, tag: str = "") -> CommRecord:
-        rec = CommRecord(int(round), link, kind, int(nbytes), int(phase), tag)
+               phase: int = 0, tag: str = "", chunk: int = -1) -> CommRecord:
+        rec = CommRecord(int(round), link, kind, int(nbytes), int(phase), tag,
+                         int(chunk))
         self.records.append(rec)
         return rec
 
@@ -54,6 +56,16 @@ class CommLedger:
                        tag: str = "") -> CommRecord:
         return self.record(round, link, payload.nbytes, kind=kind, phase=phase,
                            tag=tag or payload.scheme)
+
+    def record_stream(self, round: int, link: str, stream,
+                      kind: str = "inter", phase: int = 0,
+                      tag: str = "") -> List[CommRecord]:
+        """One record per in-flight chunk of a ``codecs.StreamPayload``; the
+        chunk records sum exactly to the whole payload's ``nbytes``."""
+        base = tag or stream.scheme
+        return [self.record(round, link, ch.nbytes, kind=kind, phase=phase,
+                            tag=base, chunk=ch.index)
+                for ch in stream.chunks]
 
     def merge(self, other: "CommLedger") -> "CommLedger":
         self.records.extend(other.records)

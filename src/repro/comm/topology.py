@@ -13,11 +13,53 @@ Collective model (ring): an all-reduce over g participants moves
 broadcast/gather halves are (g-1)/g each.  This matches how
 launch/hlo_analysis.py counts per-device collective payload, so simulated
 times compose with the HLO-derived byte totals in launch/costing.py.
+
+The streaming extension models the *pipelined* transport the codecs feed
+(``codecs.encode_stream`` / the Pallas DMA ring in ``kernels/stream.py``):
+pack, send, and unpack run as a 3-stage pipeline over fixed-size tiles, so a
+round costs fill (one tile through every stage) plus steady state paced by
+the slowest stage — ``max(pack, send, unpack)`` per tile — instead of the
+serial ``pack + send + unpack`` sum the monolithic codec pays.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
+from typing import Dict, Sequence
+
+DEFAULT_TILE_BYTES = 1 << 20  # streamed transport tile (bytes on the wire)
+
+
+@dataclass(frozen=True)
+class CodecProfile:
+    """Sustained encode/decode throughput of the payload codec (GB/s).
+
+    Defaults are host-side numpy codec class numbers (sub-GB/s); a fused
+    on-device Pallas pack runs far faster and can be profiled in instead.
+    """
+    pack_gbps: float = 0.75
+    unpack_gbps: float = 0.75
+
+    def pack_s(self, nbytes: float) -> float:
+        return float(nbytes) / (self.pack_gbps * 1e9)
+
+    def unpack_s(self, nbytes: float) -> float:
+        return float(nbytes) / (self.unpack_gbps * 1e9)
+
+
+DEFAULT_PROFILE = CodecProfile()
+
+
+def pipelined_time_s(stage_totals_s: Sequence[float], n_tiles: int) -> float:
+    """Wall-clock of a tiled pipeline given each stage's *total* time.
+
+    fill: the first tile flows through every stage back to back; steady
+    state: the remaining n-1 tiles emerge paced by the slowest stage.  At
+    n_tiles=1 this degenerates to the serial sum; as n_tiles grows it
+    approaches max(stages).
+    """
+    n = max(1, int(n_tiles))
+    fill = sum(t / n for t in stage_totals_s)
+    return fill + max(stage_totals_s) * (n - 1) / n
 
 
 @dataclass(frozen=True)
@@ -28,6 +70,24 @@ class Link:
 
     def time_s(self, nbytes: float) -> float:
         return self.latency_us * 1e-6 + float(nbytes) / (self.gbps * 1e9)
+
+    # -- streamed point-to-point message (pack | send | unpack stages) ------
+    def serial_codec_time_s(self, nbytes: float,
+                            profile: CodecProfile = DEFAULT_PROFILE) -> float:
+        """Monolithic path: encode the whole payload, ship it, decode it."""
+        return (profile.pack_s(nbytes) + self.time_s(nbytes)
+                + profile.unpack_s(nbytes))
+
+    def stream_time_s(self, nbytes: float,
+                      tile_bytes: int = DEFAULT_TILE_BYTES,
+                      profile: CodecProfile = DEFAULT_PROFILE) -> float:
+        """Streamed path: per-tile pack/send/unpack overlap; one end-to-end
+        latency is paid in the fill (tiles pipeline through the wire)."""
+        n_tiles = max(1, -(-int(nbytes) // int(tile_bytes)))
+        stages = (profile.pack_s(nbytes),
+                  float(nbytes) / (self.gbps * 1e9),
+                  profile.unpack_s(nbytes))
+        return self.latency_us * 1e-6 + pipelined_time_s(stages, n_tiles)
 
 
 @dataclass(frozen=True)
@@ -66,6 +126,25 @@ class Topology:
                     + self._ring(self.inter, self.n_pods, nbytes)
                     + self._ring_half(self.intra, self.devices_per_pod, nbytes))
         raise KeyError(f"unknown scope {scope!r}")
+
+    # -- streamed collectives (pack | ring | unpack pipeline) ---------------
+    def allreduce_serial_time_s(self, nbytes: float, scope: str = "intra",
+                                profile: CodecProfile = DEFAULT_PROFILE) -> float:
+        """Monolithic compressed all-reduce: every device encodes its full
+        contribution, the ring runs, every device decodes — back to back."""
+        return (profile.pack_s(nbytes) + self.allreduce_time_s(nbytes, scope)
+                + profile.unpack_s(nbytes))
+
+    def allreduce_stream_time_s(self, nbytes: float, scope: str = "intra",
+                                tile_bytes: int = DEFAULT_TILE_BYTES,
+                                profile: CodecProfile = DEFAULT_PROFILE) -> float:
+        """Streamed compressed all-reduce: tiles of the encoded buffer enter
+        the ring as soon as they are packed, and decode as they land."""
+        n_tiles = max(1, -(-int(nbytes) // int(tile_bytes)))
+        stages = (profile.pack_s(nbytes),
+                  self.allreduce_time_s(nbytes, scope),
+                  profile.unpack_s(nbytes))
+        return pipelined_time_s(stages, n_tiles)
 
     @staticmethod
     def _ring(link: Link, g: int, nbytes: float) -> float:

@@ -247,6 +247,13 @@ class SyncConfig:
     # link topology preset (repro.comm.topology.PRESETS) used to turn
     # per-round encoded bytes into simulated wall-clock
     topology: str = "v5p_superpod"
+    # bucket fusion (repro.comm.buckets): the sync pytree is flattened into
+    # fixed-size fp32 buckets so one fused compressor/codec pass replaces the
+    # per-leaf kernel loop.  0 = legacy per-leaf path.
+    bucket_size: int = 1 << 16
+    # streaming codec pipeline (repro.comm.topology): per-tile pack/send/
+    # unpack overlap in the simulated round time.  0 = monolithic serial.
+    stream_tile_bytes: int = 1 << 20
 
 
 @dataclass(frozen=True)

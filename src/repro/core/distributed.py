@@ -93,8 +93,64 @@ def dense_sync(grads_g):
     return tree_map(lambda g: jnp.mean(g, axis=0), grads_g)
 
 
-def efbv_sync(key, grads_g, state: SyncState, c: Compressor, lam: float, nu: float):
-    """EF-BV over stacked per-group grads. Returns (g_est, new_state)."""
+def efbv_sync(key, grads_g, state: SyncState, c: Compressor, lam: float,
+              nu: float, bucket_size: Optional[int] = None):
+    """EF-BV over stacked per-group grads. Returns (g_est, new_state).
+
+    By default the pytree is fused into fixed-size fp32 buckets
+    (repro.comm.buckets) so the whole tree is compressed in ONE vmapped
+    call per group instead of a per-leaf Python loop of small kernels —
+    top-k/rand-k then select over the full gradient vector (the paper's
+    d-dimensional operator) rather than per leaf.  ``bucket_size=0`` keeps
+    the legacy per-leaf path (per-leaf compressor semantics).
+
+    Sharding-safe compressors (``flatten=False``, e.g. qsgd_sharded) always
+    take the per-leaf path: bucketize's reshape/concat is exactly the
+    flatten that forces GSPMD to all-gather 2D-sharded leaves, the thing
+    those compressors exist to avoid.
+    """
+    from repro.comm import buckets as bk
+
+    if bucket_size is None:
+        bucket_size = bk.DEFAULT_BUCKET_SIZE
+    if not bucket_size or not c.flatten:
+        return _efbv_sync_leaves(key, grads_g, state, c, lam, nu)
+    g_b, layout = bk.bucketize_groups(grads_g, bucket_size)      # (G, nb, B)
+    h_b, _ = bk.bucketize_groups(state.h, bucket_size)
+    hb_b, _ = bk.bucketize(state.h_bar, bucket_size)             # (nb, B)
+    keys = jax.random.split(key, g_b.shape[0])
+    d_i = _fused_compress(c, keys, g_b - h_b, layout.d)
+    d = jnp.mean(d_i, axis=0)
+    f32 = jnp.float32
+    return (
+        bk.debucketize(hb_b + nu * d, layout, dtype=f32),
+        SyncState(h=bk.debucketize_groups(h_b + lam * d_i, layout, dtype=f32),
+                  h_bar=bk.debucketize(hb_b + lam * d, layout, dtype=f32),
+                  step=state.step + 1),
+    )
+
+
+def _fused_compress(c: Compressor, keys, delta_b, d: int):
+    """One fused compressor pass over the bucketed (G, n_buckets, B) delta.
+
+    The compressor must see the TRUE d-dim vector, not the padded bucket
+    matrix: top-k/rand-k derive k (and rand-k its d/k scale) from the input
+    size, so compressing the zero-padded tail would inflate k for trees
+    smaller than a bucket.  (Only ``flatten=True`` compressors reach this —
+    sharding-safe ones stay on the per-leaf path.)
+    """
+    G = delta_b.shape[0]
+    flat = delta_b.reshape(G, -1)
+    pad = flat.shape[1] - d
+    out = jax.vmap(lambda k, v: c(k, v))(keys, flat[:, :d])
+    if pad:
+        out = jnp.pad(out, ((0, 0), (0, pad)))
+    return out.reshape(delta_b.shape)
+
+
+def _efbv_sync_leaves(key, grads_g, state: SyncState, c: Compressor,
+                      lam: float, nu: float):
+    """Per-leaf EF-BV (one compressor kernel per pytree leaf)."""
     leaves, treedef = jax.tree_util.tree_flatten(grads_g)
     h_leaves = treedef.flatten_up_to(state.h)
     hb_leaves = treedef.flatten_up_to(state.h_bar)
@@ -119,7 +175,7 @@ def efbv_sync(key, grads_g, state: SyncState, c: Compressor, lam: float, nu: flo
 
 
 def hier_param_sync(key, params_g, state: SyncState, c: Compressor, lam: float,
-                    period: int):
+                    period: int, bucket_size: Optional[int] = None):
     """Cohort-Squeeze / local training on the fabric (param-level EF21 sync).
 
     params_g: pytree with leading group axis (pods, or (pod x data) worker
@@ -134,10 +190,33 @@ def hier_param_sync(key, params_g, state: SyncState, c: Compressor, lam: float,
     With identity compressor and lam=1 this is exact parameter averaging
     (FedAvg); with top-k/qsgd the inter-group traffic carries only the
     compressed delta.  Returns (new params_g, new state).
+
+    Like ``efbv_sync``, the parameter tree is bucket-fused by default: the
+    whole delta is compressed in one vmapped call per group instead of one
+    kernel per leaf (``bucket_size=0`` restores the per-leaf loop, and
+    sharding-safe ``flatten=False`` compressors always take it — see
+    ``efbv_sync``).
     """
+    from repro.comm import buckets as bk
+
+    if bucket_size is None:
+        bucket_size = bk.DEFAULT_BUCKET_SIZE
     do_sync = (state.step % period) == (period - 1)
 
-    def sync_branch(args):
+    def sync_fused(args):
+        params_g, state = args
+        p_b, layout = bk.bucketize_groups(params_g, bucket_size)   # (G, nb, B)
+        hb_b, _ = bk.bucketize(state.h_bar, bucket_size)
+        keys = jax.random.split(key, p_b.shape[0])
+        d_i = _fused_compress(c, keys, p_b - hb_b, layout.d)
+        hb2 = hb_b + lam * jnp.mean(d_i, axis=0)
+        new_hb = bk.debucketize(hb2, layout, dtype=jnp.float32)
+        new_p = tree_map(
+            lambda hb, p: jnp.broadcast_to(hb.astype(p.dtype)[None], p.shape),
+            new_hb, params_g)
+        return new_p, SyncState(h=state.h, h_bar=new_hb, step=state.step + 1)
+
+    def sync_leaves(args):
         params_g, state = args
         leaves, treedef = jax.tree_util.tree_flatten(params_g)
         hb_leaves = treedef.flatten_up_to(state.h_bar)
@@ -158,6 +237,7 @@ def hier_param_sync(key, params_g, state: SyncState, c: Compressor, lam: float,
         params_g, state = args
         return params_g, SyncState(h=state.h, h_bar=state.h_bar, step=state.step + 1)
 
+    sync_branch = sync_fused if (bucket_size and c.flatten) else sync_leaves
     return jax.lax.cond(do_sync, sync_branch, local_branch, (params_g, state))
 
 

@@ -56,6 +56,22 @@ def unpack_bits(words: jax.Array, d: int, interpret: bool = True) -> jax.Array:
     return bits[:, :w].reshape(-1)[:d]
 
 
+def _quant_tiles(x: jax.Array, key: jax.Array):
+    """Shared shape plumbing of every quantize entry point: pad the flat
+    tensor to whole (TILE_ROWS, QBLOCK) tiles and draw the stochastic-round
+    noise.  ONE definition on purpose — quantize_pack, stream_quantize_pack
+    and quantize_dequantize are bit-identical only while they pad and draw
+    noise identically."""
+    flat = x.reshape(-1)
+    d = flat.shape[0]
+    qb, tr = _q8.QBLOCK, _q8.TILE_ROWS
+    rows = -(-d // qb)
+    rows_pad = -(-rows // tr) * tr
+    padded = jnp.zeros((rows_pad * qb,), x.dtype).at[:d].set(flat).reshape(rows_pad, qb)
+    noise = jax.random.uniform(key, padded.shape, jnp.float32)
+    return padded, noise, d
+
+
 @partial(jax.jit, static_argnames=("bits", "interpret"))
 def quantize_pack(x: jax.Array, key: jax.Array, bits: int = 8,
                   interpret: bool = True):
@@ -65,13 +81,7 @@ def quantize_pack(x: jax.Array, key: jax.Array, bits: int = 8,
     so ``q * scales`` reproduces its dequantized output bit-for-bit — the
     codec's decode of the wire planes equals the on-chip compressor carrier.
     """
-    flat = x.reshape(-1)
-    d = flat.shape[0]
-    qb, tr = _q8.QBLOCK, _q8.TILE_ROWS
-    rows = -(-d // qb)
-    rows_pad = -(-rows // tr) * tr
-    padded = jnp.zeros((rows_pad * qb,), x.dtype).at[:d].set(flat).reshape(rows_pad, qb)
-    noise = jax.random.uniform(key, padded.shape, jnp.float32)
+    padded, noise, _ = _quant_tiles(x, key)
     return _bp.quant_pack_2d(padded, noise, bits=bits, interpret=interpret)
 
 
@@ -81,6 +91,18 @@ def unpack_dequantize(q: jax.Array, scales: jax.Array, d: int,
     """Inverse of quantize_pack: wire planes -> flat (d,) float32 tensor."""
     out = _bp.unpack_dequant_2d(q, scales, interpret=interpret)
     return out.reshape(-1)[:d]
+
+
+@partial(jax.jit, static_argnames=("bits", "interpret"))
+def stream_quantize_pack(x: jax.Array, key: jax.Array, bits: int = 8,
+                         interpret: bool = True):
+    """quantize_pack via the double-buffered streaming DMA ring
+    (kernels/stream.py).  Identical shape plumbing and noise draw, so the
+    wire planes are bit-identical to ``quantize_pack``'s."""
+    from repro.kernels import stream as _st
+
+    padded, noise, _ = _quant_tiles(x, key)
+    return _st.stream_quant_pack_2d(padded, noise, bits=bits, interpret=interpret)
 
 
 def nibble_pack(q: jax.Array) -> jax.Array:
@@ -106,13 +128,7 @@ def nibble_unpack(packed: jax.Array, n: int) -> jax.Array:
 def quantize_dequantize(x: jax.Array, key: jax.Array, bits: int = 8,
                         interpret: bool = True) -> jax.Array:
     """Blockwise absmax quantize-dequantize of an arbitrary-shape tensor."""
-    flat = x.reshape(-1)
-    d = flat.shape[0]
-    qb, tr = _q8.QBLOCK, _q8.TILE_ROWS
-    rows = -(-d // qb)
-    rows_pad = -(-rows // tr) * tr
-    padded = jnp.zeros((rows_pad * qb,), x.dtype).at[:d].set(flat).reshape(rows_pad, qb)
-    noise = jax.random.uniform(key, padded.shape, jnp.float32)
+    padded, noise, d = _quant_tiles(x, key)
     out = _q8.quant_dequant_2d(padded, noise, bits=bits, interpret=interpret)
     return out.reshape(-1)[:d].reshape(x.shape)
 

@@ -44,6 +44,25 @@ def unpack_dequant_ref(q2d: jax.Array, scales: jax.Array,
     return (q2d.astype(jnp.float32) * scales).astype(out_dtype)
 
 
+def stream_quant_pack_ref(x2d: jax.Array, noise2d: jax.Array, bits: int = 8,
+                          tile_rows: int = 8):
+    """Oracle for kernels/stream: quantize-pack computed tile by tile.
+
+    The quantization blocks along axis 1, so tiling the row axis
+    cannot change the result — this oracle documents (and the tests assert)
+    that the streamed ring is bit-identical to the monolithic pass.
+    """
+    rows = x2d.shape[0]
+    assert rows % tile_rows == 0, (x2d.shape, tile_rows)
+    qs, ss = [], []
+    for r in range(0, rows, tile_rows):
+        q, s = quant_pack_ref(x2d[r: r + tile_rows],
+                              noise2d[r: r + tile_rows], bits=bits)
+        qs.append(q)
+        ss.append(s)
+    return jnp.concatenate(qs, axis=0), jnp.concatenate(ss, axis=0)
+
+
 def nm_prune_ref(w: jax.Array, scores: jax.Array, n: int = 2, m: int = 4):
     """Keep n largest scores per group of m along d_in; first-index tie-break."""
     d_in, d_out = w.shape

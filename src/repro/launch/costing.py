@@ -35,6 +35,8 @@ from repro.launch import hlo_analysis as hlo
 from repro.models import attention as attn_lib
 from repro.models import period_info
 
+from repro.comm.topology import DEFAULT_TILE_BYTES as _STREAM_TILE
+
 B0_K = 512
 B0_Q = 512
 
@@ -131,10 +133,11 @@ def corrected_costs(arch_cfg: ModelConfig, mesh, shape_name: str,
     return {"corrected": corrected, "variants": {"A": A, "B": B, "C": C},
             "n_periods": n_periods, "grad_accum": grad_accum,
             "mean_span": mean_span, "detail": detail,
-            "comm_time": comm_time_model(corrected)}
+            "comm_time": comm_time_model(corrected, tile_bytes=_STREAM_TILE)}
 
 
-def comm_time_model(measures: Dict[str, float], topology=None) -> Dict[str, float]:
+def comm_time_model(measures: Dict[str, float], topology=None,
+                    tile_bytes: int = 0) -> Dict[str, float]:
     """Bandwidth-bound collective wall-clock from the corrected per-device bytes.
 
     Splits the HLO-derived collective traffic onto the link topology: the
@@ -144,8 +147,13 @@ def comm_time_model(measures: Dict[str, float], topology=None) -> Dict[str, floa
     aggregate many collectives, so per-message latency and ring step counts
     are not attributable here — the per-round latency-aware model lives in
     repro.comm (Topology.allreduce_time_s / CommLedger.round_time_s).
+
+    With ``tile_bytes > 0`` the report adds ``t_comm_stream_s``: the
+    hierarchical schedule streamed per tile, so the intra-pod reduce of tile
+    k+1 overlaps the inter-pod transfer of tile k (repro.comm.topology's
+    pipelined model); serial t_comm_s stays the sum.
     """
-    from repro.comm.topology import get_topology
+    from repro.comm.topology import get_topology, pipelined_time_s
 
     topo = topology or get_topology("v5p_superpod")
     total = float(measures.get("coll_total", 0.0))
@@ -153,9 +161,14 @@ def comm_time_model(measures: Dict[str, float], topology=None) -> Dict[str, floa
     intra = max(0.0, total - inter)
     t_intra = intra / (topo.intra.gbps * 1e9)
     t_inter = inter / (topo.inter.gbps * 1e9)
-    return {"intra_bytes": intra, "inter_bytes": inter,
-            "t_intra_s": t_intra, "t_inter_s": t_inter,
-            "t_comm_s": t_intra + t_inter, "topology": topo.name}
+    out = {"intra_bytes": intra, "inter_bytes": inter,
+           "t_intra_s": t_intra, "t_inter_s": t_inter,
+           "t_comm_s": t_intra + t_inter, "topology": topo.name}
+    if tile_bytes > 0:
+        n_tiles = max(1, -(-int(total) // int(tile_bytes)))
+        out["t_comm_stream_s"] = pipelined_time_s((t_intra, t_inter), n_tiles)
+        out["stream_tile_bytes"] = int(tile_bytes)
+    return out
 
 
 def model_flops(cfg: ModelConfig, shape_name: str) -> Dict[str, float]:

@@ -34,13 +34,17 @@ def train(cfg: ModelConfig, tc: TrainConfig, batches: Iterator[dict],
 
         cost = round_comm(tc.sync, cfg.param_count())
         dense = 4.0 * cfg.param_count()
+        stream = (f" streamed over {cost.tile_bytes >> 10} KB tiles "
+                  f"(serial {cost.serial_time_s * 1e3:.2f} ms, "
+                  f"{cost.stream_speedup:.2f}x)"
+                  if cost.tile_bytes else " (monolithic codec)")
         log.info("sync=%s: %.3f MB/round on the slow links (%.1fx vs dense "
-                 "fp32)%s, simulated %.2f ms/round on %s",
+                 "fp32)%s, simulated %.2f ms/round on %s,%s",
                  tc.sync.mode, cost.inter_bytes / 1e6,
                  dense / max(cost.inter_bytes, 1e-9),
                  (f" + {cost.intra_bytes / 1e6:.1f} MB intra-pod"
                   if cost.intra_bytes else ""),
-                 cost.time_s * 1e3, tc.sync.topology)
+                 cost.time_s * 1e3, tc.sync.topology, stream)
 
     history = []
     t0 = time.time()

@@ -122,7 +122,8 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_groups: int, n_pods: in
             state.params, gbatch)
         loss = jnp.mean(loss_g)
         g_est, sync_state = dist.efbv_sync(
-            sub, grads_g, state.sync_state, compressor, lam, nu)
+            sub, grads_g, state.sync_state, compressor, lam, nu,
+            bucket_size=sync.bucket_size)
         g_est = tree_map(lambda g, p: g.astype(p.dtype), g_est, state.params)
         g_est, gnorm = clip_by_global_norm(g_est, tc.grad_clip)
         updates, opt_state = opt.update(g_est, state.opt_state, state.params)
@@ -146,7 +147,8 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_groups: int, n_pods: in
         params_g, opt_state, loss_g, gnorm_g = jax.vmap(one_group)(
             state.params, state.opt_state, gbatch)
         params_g, sync_state = dist.hier_param_sync(
-            sub, params_g, state.sync_state, compressor, lam, sync.sync_period)
+            sub, params_g, state.sync_state, compressor, lam, sync.sync_period,
+            bucket_size=sync.bucket_size)
         metrics = {"loss": jnp.mean(loss_g), "ce": jnp.mean(loss_g),
                    "grad_norm": jnp.mean(gnorm_g)}
         return TrainState(params_g, opt_state, sync_state, key), metrics

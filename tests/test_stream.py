@@ -1,0 +1,338 @@
+"""Streaming codec pipeline: chunk partition exactness, per-chunk ledger
+attribution, bucket fusion, the double-buffered Pallas DMA ring, and the
+pipelined round-time model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 container lacks hypothesis: deterministic shim
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.comm import (DEFAULT_TILE_BYTES, CodecProfile, CommLedger,
+                        bucketize, bucketize_groups, debucketize,
+                        debucketize_groups, decode, decode_stream, encode,
+                        encode_stream, get_topology, pipelined_time_s,
+                        round_cost, split_payload)
+from repro.comm import codecs
+from repro.configs.base import SyncConfig
+from repro.core import compressors as C
+from repro.core import distributed as dist
+
+
+def _compressor(name: str) -> C.Compressor:
+    return {
+        "identity": lambda: C.identity(),
+        "top_k": lambda: C.top_k(0.1),
+        "rand_k": lambda: C.rand_k(0.25),
+        "block_top_k": lambda: C.block_top_k(0.1, block=64),
+        "qsgd8": lambda: C.qsgd(8, 64),
+        "qsgd4": lambda: C.qsgd(4, 64),
+        "qsgd_sharded": lambda: C.qsgd_sharded(8, 256),
+        "qsgd_kernel": lambda: C.qsgd_kernel(8),
+    }[name]()
+
+
+# ---------------------------------------------------------------------------
+# chunked == monolithic, property-style over scheme x tile x size
+# ---------------------------------------------------------------------------
+@settings(max_examples=24, deadline=None)
+@given(name=st.sampled_from(["identity", "top_k", "rand_k", "block_top_k",
+                             "qsgd8", "qsgd4", "qsgd_sharded", "qsgd_kernel"]),
+       tile=st.sampled_from([64, 96, 512, 4096, 1 << 16]),
+       d=st.sampled_from([63, 512, 777, 4096, 5000]))
+def test_stream_decode_bitexact_and_bytes_sum(name, tile, d):
+    comp = _compressor(name)
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(jax.random.PRNGKey(d), (d,)) * 3
+    p = encode(comp, key, x)
+    sp = split_payload(p, tile)
+    # per-chunk bytes partition the monolithic payload exactly
+    assert sp.nbytes == p.nbytes
+    assert sum(ch.nbytes for ch in sp.chunks) == p.nbytes
+    # chunked decode == whole-payload decode, bit for bit
+    np.testing.assert_array_equal(np.asarray(decode_stream(sp)),
+                                  np.asarray(decode(p)))
+    # chunk coordinate ranges tile the flat space
+    starts = [ch.start for ch in sp.chunks]
+    stops = [ch.stop for ch in sp.chunks]
+    assert starts[0] == 0 and stops[-1] == d
+    assert all(a == b for a, b in zip(stops[:-1], starts[1:]))
+
+
+def test_encode_stream_matches_compressor_bitmap_scheme():
+    comp = C.top_k(0.2)
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(jax.random.PRNGKey(5), (777,))
+    p = encode(comp, key, x, scheme="sparse_bitmap")
+    sp = split_payload(p, 96)
+    assert sp.nbytes == p.nbytes
+    np.testing.assert_array_equal(np.asarray(decode_stream(sp)),
+                                  np.asarray(decode(p)))
+    assert codecs.stream_roundtrip_equal(comp, key, x, tile=128)
+
+
+def test_stream_roundtrip_2d_sharded_fallback():
+    """qsgd_sharded on a last-dim that doesn't block evenly (scalar scale)."""
+    comp = C.qsgd_sharded(8, 256)
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(jax.random.PRNGKey(3), (7, 107))
+    p = encode(comp, key, x)
+    sp = split_payload(p, 100)
+    assert sp.nbytes == p.nbytes
+    np.testing.assert_array_equal(np.asarray(decode_stream(sp)),
+                                  np.asarray(decode(p)))
+
+
+# ---------------------------------------------------------------------------
+# ledger: per-chunk attribution
+# ---------------------------------------------------------------------------
+def test_ledger_stream_records_sum_to_payload():
+    comp = C.qsgd(8, 64)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5000,))
+    p = encode(comp, key, x)
+    sp = split_payload(p, 512)
+    led = CommLedger()
+    recs = led.record_stream(3, "client->server", sp)
+    assert len(recs) == sp.n_chunks > 1
+    assert led.total_bytes == p.nbytes
+    assert [r.chunk for r in recs] == list(range(sp.n_chunks))
+    assert all(r.tag == "quant" and r.round == 3 for r in recs)
+    # whole-payload record agrees with the chunk sum
+    led2 = CommLedger()
+    led2.record_payload(3, "client->server", p)
+    assert led2.total_bytes == led.total_bytes
+
+
+# ---------------------------------------------------------------------------
+# bit-stream packing (satellite: vectorized word-wise path)
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(nbits=st.sampled_from([1, 3, 7, 8, 11, 13, 16, 24]),
+       n=st.sampled_from([0, 1, 7, 1000]))
+def test_pack_uint_stream_matches_bit_reference(nbits, n):
+    rng = np.random.default_rng(nbits * 1000 + n)
+    vals = rng.integers(0, 1 << nbits, size=n).astype(np.uint64)
+    got = codecs._pack_uint_stream(vals, nbits)
+    if n:
+        bits = ((vals[:, None] >> np.arange(nbits, dtype=np.uint64)) & 1)
+        want = np.packbits(bits.astype(np.uint8).reshape(-1), bitorder="little")
+        np.testing.assert_array_equal(got, want)
+    assert got.nbytes == (n * nbits + 7) // 8
+    np.testing.assert_array_equal(codecs._unpack_uint_stream(got, n, nbits),
+                                  vals.astype(np.int64))
+    # out-of-range values truncate to nbits (old packbits contract) instead
+    # of scatter-ORing stray bits into neighboring bytes
+    big = vals + (np.uint64(1) << np.uint64(nbits))
+    np.testing.assert_array_equal(codecs._pack_uint_stream(big, nbits), got)
+
+
+# ---------------------------------------------------------------------------
+# bucket fusion
+# ---------------------------------------------------------------------------
+def _tree():
+    return {"a": jnp.arange(12., dtype=jnp.float32).reshape(3, 4),
+            "b": jnp.ones((5,), jnp.bfloat16) * 2,
+            "c": jnp.float32(3.0)}
+
+
+def test_bucketize_roundtrip_exact():
+    tree = _tree()
+    buckets, layout = bucketize(tree, bucket_size=8)
+    assert buckets.shape == (layout.n_buckets, 8)
+    assert layout.d == 18 and layout.n_buckets == 3
+    back = debucketize(buckets, layout)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_bucketize_groups_roundtrip_exact():
+    G = 3
+    tree_g = jax.tree_util.tree_map(
+        lambda p: jnp.stack([jnp.asarray(p, jnp.float32) * (i + 1)
+                             for i in range(G)]), _tree())
+    buckets, layout = bucketize_groups(tree_g, bucket_size=8)
+    assert buckets.shape == (G, layout.n_buckets, 8)
+    back = debucketize_groups(buckets, layout, dtype=jnp.float32)
+    for a, b in zip(jax.tree_util.tree_leaves(tree_g),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_efbv_sync_fused_matches_per_leaf_with_deterministic_compressor():
+    """With the identity compressor both paths are exact arithmetic."""
+    G = 4
+    params = {"w": jnp.ones((6, 2), jnp.float32), "b": jnp.zeros((3,))}
+    grads_g = jax.tree_util.tree_map(
+        lambda p: jnp.stack([p * (i + 1) for i in range(G)]), params)
+    state = dist.sync_state_init(params, G, SyncConfig(mode="efbv"))
+    out = {}
+    for bs in (0, 8):
+        g, st = dist.efbv_sync(jax.random.PRNGKey(0), grads_g, state,
+                               C.identity(), 0.5, 0.7, bucket_size=bs)
+        out[bs] = (g, st)
+    for a, b in zip(jax.tree_util.tree_leaves(out[0][0]),
+                    jax.tree_util.tree_leaves(out[8][0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(out[0][1].h_bar),
+                    jax.tree_util.tree_leaves(out[8][1].h_bar)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_efbv_sync_fused_is_one_compressor_call(monkeypatch):
+    """The fused path must hit the compressor ONCE for the whole tree."""
+    calls = []
+    base = C.identity()
+    counting = C.Compressor("counting", lambda k, x: calls.append(1) or x,
+                            eta=0.0, omega=0.0, bits_per_dim=32.0,
+                            deterministic=True)
+    G = 2
+    params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((7,)), "c": jnp.ones((3,))}
+    grads_g = jax.tree_util.tree_map(
+        lambda p: jnp.stack([p] * G), params)
+    state = dist.sync_state_init(params, G, SyncConfig(mode="efbv"))
+    with jax.disable_jit():
+        dist.efbv_sync(jax.random.PRNGKey(0), grads_g, state, counting,
+                       0.5, 0.5, bucket_size=8)
+        fused_calls = len(calls)
+        calls.clear()
+        dist.efbv_sync(jax.random.PRNGKey(0), grads_g, state, counting,
+                       0.5, 0.5, bucket_size=0)
+        leaf_calls = len(calls)
+    # vmap traces its operand once, so call count == number of compressor
+    # program instances: ONE fused pass vs one per pytree leaf
+    assert fused_calls == 1
+    assert leaf_calls == len(jax.tree_util.tree_leaves(params))
+    assert base is not counting
+
+
+def test_efbv_fused_sparsifier_sees_true_d_not_padded():
+    """top_k in the fused path must derive k from the true coordinate count:
+    with d=96 << bucket_size, k = 0.05*96 ~ 5 per group, so the compressed
+    estimate stays sparse (padded-matrix k would be 0.05*65536 > d and keep
+    every coordinate)."""
+    G = 2
+    params = {"w": jnp.zeros((64,)), "b": jnp.zeros((32,))}
+    grads_g = jax.tree_util.tree_map(
+        lambda p: jnp.stack([jax.random.normal(jax.random.PRNGKey(i), p.shape)
+                             for i in range(G)]), params)
+    state = dist.sync_state_init(params, G, SyncConfig(mode="efbv"))
+    g_est, _ = dist.efbv_sync(jax.random.PRNGKey(0), grads_g, state,
+                              C.top_k(0.05), 1.0, 1.0)  # default bucket_size
+    nnz = sum(int(jnp.sum(l != 0)) for l in jax.tree_util.tree_leaves(g_est))
+    k = max(1, round(0.05 * 96))
+    assert 0 < nnz <= G * k  # union of per-group top-k supports
+
+
+def test_hier_param_sync_fused_fedavg_and_period():
+    params_g = {"w": jnp.stack([jnp.ones((4,)) * 1.0, jnp.ones((4,)) * 3.0])}
+    st0 = dist.SyncState(h=(), h_bar={"w": jnp.zeros((4,))},
+                         step=jnp.zeros((), jnp.int32))
+    new_p, st1 = dist.hier_param_sync(jax.random.PRNGKey(0), params_g, st0,
+                                      C.identity(), 1.0, period=1,
+                                      bucket_size=8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), 2.0 * np.ones((2, 4)),
+                               rtol=1e-6)
+    # off-period step leaves params untouched
+    new_p, st2 = dist.hier_param_sync(jax.random.PRNGKey(0), params_g, st0,
+                                      C.identity(), 1.0, period=4,
+                                      bucket_size=8)
+    np.testing.assert_array_equal(np.asarray(new_p["w"]),
+                                  np.asarray(params_g["w"]))
+    assert int(st2.step) == 1
+
+
+# ---------------------------------------------------------------------------
+# streaming DMA ring kernel
+# ---------------------------------------------------------------------------
+def test_stream_quantize_pack_matches_monolithic():
+    from repro.kernels import ops
+
+    for d in (511, 3000, 4097):
+        x = jax.random.normal(jax.random.PRNGKey(d), (d,)) * 4
+        key = jax.random.PRNGKey(d + 1)
+        q1, s1 = ops.quantize_pack(x, key)
+        q2, s2 = ops.stream_quantize_pack(x, key)
+        np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_stream_kernel_vs_tiled_ref():
+    from repro.kernels import quant8, ref, stream
+
+    rows = quant8.TILE_ROWS * 3
+    x = jax.random.normal(jax.random.PRNGKey(0), (rows, quant8.QBLOCK)) * 7
+    noise = jax.random.uniform(jax.random.PRNGKey(1), x.shape)
+    q, s = stream.stream_quant_pack_2d(x, noise, bits=8)
+    qr, sr = ref.stream_quant_pack_ref(x, noise, bits=8,
+                                       tile_rows=quant8.TILE_ROWS)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# pipelined round-time model
+# ---------------------------------------------------------------------------
+def test_pipelined_time_limits():
+    stages = (0.03, 0.05, 0.02)
+    # one tile degenerates to the serial sum
+    assert pipelined_time_s(stages, 1) == pytest.approx(sum(stages))
+    # more tiles always helps, approaching max(stages)
+    prev = sum(stages)
+    for n in (2, 4, 16, 256):
+        t = pipelined_time_s(stages, n)
+        assert max(stages) < t < prev + 1e-12
+        prev = t
+    assert pipelined_time_s(stages, 10_000) == pytest.approx(max(stages),
+                                                             rel=1e-2)
+
+
+def test_streamed_upload_2x_on_geo_wan_default_tile():
+    """Acceptance: >=2x round-time reduction for the streamed path on the
+    geo-WAN preset at the default tile size (100M-param qsgd8 upload)."""
+    sync = SyncConfig(mode="efbv", compressor="qsgd", quant_bits=8)
+    from repro.comm import measured_payload_bits
+
+    nbytes = measured_payload_bits(sync, 100_000_000) / 8.0
+    link = get_topology("geo_wan").inter
+    t_serial = link.serial_codec_time_s(nbytes)
+    t_stream = link.stream_time_s(nbytes, DEFAULT_TILE_BYTES)
+    assert t_serial / t_stream >= 2.0
+
+
+def test_round_cost_stream_fields_and_speedup():
+    sync = SyncConfig(mode="efbv", compressor="qsgd", quant_bits=8)
+    topo = get_topology("geo_wan")
+    cost = round_cost(sync, 25_000_000, topology=topo)
+    # the SyncConfig default and launch/costing must track the one constant
+    assert cost.tile_bytes == sync.stream_tile_bytes == DEFAULT_TILE_BYTES
+    from repro.launch.costing import _STREAM_TILE
+    assert _STREAM_TILE == DEFAULT_TILE_BYTES
+    assert cost.time_s < cost.serial_time_s         # streaming always wins
+    assert cost.stream_speedup > 1.0
+    # disabling streaming falls back to the serial time
+    mono = round_cost(SyncConfig(mode="efbv", compressor="qsgd", quant_bits=8,
+                                 stream_tile_bytes=0), 25_000_000,
+                      topology=topo)
+    assert mono.time_s == pytest.approx(mono.serial_time_s)
+    assert mono.time_s == pytest.approx(cost.serial_time_s)
+    # dense mode pays no codec, so streaming changes nothing
+    dense = round_cost(SyncConfig(mode="dense"), 25_000_000, topology=topo)
+    assert dense.time_s == pytest.approx(dense.serial_time_s)
+
+
+def test_link_stream_time_monotone_in_tile():
+    link = get_topology("geo_wan").inter
+    profile = CodecProfile(pack_gbps=0.5, unpack_gbps=0.5)
+    nbytes = 50e6
+    times = [link.stream_time_s(nbytes, tb, profile)
+             for tb in (1 << 24, 1 << 22, 1 << 20, 1 << 18)]
+    assert all(a >= b for a, b in zip(times, times[1:]))
+    assert times[-1] < link.serial_codec_time_s(nbytes, profile)
