@@ -1,0 +1,189 @@
+"""Aggregation-tree benchmark: Cohort-Squeeze beyond two levels (Ch. 5).
+
+Sweeps tree depth x per-level sync period x per-level compressor and reports
+simulated round time/bytes against the flat two-level ``hier`` baseline on
+all three topology presets.  The interesting physics: every extra tree level
+lets a slower link carry a more aggressively compressed, less frequent
+payload, and shrinks the ring that crosses it (100 phones ringing a WAN at
+once vs 5 phones per cell edge).
+
+Rows:
+  hier_tree/<preset>_flat        flat hier baseline (qsgd8 inter, period 8)
+  hier_tree/<preset>_depth2      the same schedule written as a depth-2
+                                 levels config — asserted bit-identical to
+                                 the flat baseline (acceptance)
+  hier_tree/<preset>_tree        the multi-level preset with per-level
+                                 compression; derived shows slow-link bytes
+                                 and speedup vs flat (strictly better on
+                                 edge_fl — acceptance)
+  hier_tree/ledger_<preset>      per-level ledger attribution; asserts level
+                                 bytes sum to RoundCost.total_bytes per round
+  hier_tree/sweep_*              depth x base-period x uplink-compressor
+                                 sweep on the edge-FL hierarchy
+
+Smoke mode (env BENCH_SMOKE=1 or --smoke): tiny payloads — used by CI so
+tree-costing regressions fail loudly.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+from benchmarks.common import emit
+from repro.comm import (Link, TreeLevel, TreeTopology, get_topology,
+                        register_tree_topology, round_cost, round_ledger)
+from repro.configs.base import LevelConfig, SyncConfig
+
+P = 8  # base sync period (the flat baseline's sync_period)
+
+# deeper edge hierarchy for the depth sweep: phone -> cell -> zone -> region
+# -> cloud (4 aggregation levels, 100 phones like the flat preset)
+register_tree_topology(TreeTopology("edge_fl_tree4", (
+    TreeLevel("uplink", 5, Link(gbps=0.00625, latency_us=50_000.0)),
+    TreeLevel("metro", 5, Link(gbps=1.0, latency_us=2_000.0)),
+    TreeLevel("zone", 2, Link(gbps=1.0, latency_us=5_000.0)),
+    TreeLevel("wan", 2, Link(gbps=1.0, latency_us=20_000.0)),
+)))
+
+# per-preset multi-level schedules: the slowest link gets the strongest
+# sparsifier, deeper (faster but rarer) levels stack quantization on top
+TREE_LEVELS = {
+    "v5p_superpod": ("v5p_superpod_tree", (
+        LevelConfig("ici", 1, "identity"),
+        LevelConfig("host", P, "qsgd", quant_bits=8),
+        LevelConfig("dcn", 2 * P, "top_k", 0.05),
+    )),
+    "geo_wan": ("geo_wan_tree", (
+        LevelConfig("ici", 1, "identity"),
+        LevelConfig("dcn", P, "qsgd", quant_bits=8),
+        LevelConfig("wan", 2 * P, "top_k", 0.05),
+    )),
+    "edge_fl": ("edge_fl_tree", (
+        LevelConfig("uplink", P, "top_k", 0.05),
+        LevelConfig("metro", 2 * P, "qsgd", quant_bits=8),
+        LevelConfig("wan", 4 * P, "top_k", 0.01),
+    )),
+}
+
+
+def _smoke() -> bool:
+    return os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+
+def _flat_sync(preset: str, period: int = P) -> SyncConfig:
+    return SyncConfig(mode="hier", compressor="qsgd", quant_bits=8,
+                      sync_period=period, topology=preset)
+
+
+def _depth2_sync(preset: str, period: int = P) -> SyncConfig:
+    return SyncConfig(mode="hier", topology=preset, levels=(
+        LevelConfig("intra", 1, "identity"),
+        LevelConfig("inter", period, "qsgd", quant_bits=8)))
+
+
+def _slow_bytes(cost, gbps_cut: float) -> float:
+    """Per-round bytes riding links no faster than the flat slow link."""
+    return sum(lv.bytes_per_round for lv in cost.levels
+               if lv.link_gbps <= gbps_cut)
+
+
+def _preset_rows(n_params: int):
+    rows = []
+    for preset in ("v5p_superpod", "geo_wan", "edge_fl"):
+        flat_topo = get_topology(preset)
+        flat = round_cost(_flat_sync(preset), n_params)
+        rows.append((f"hier_tree/{preset}_flat_p{P}", flat.time_s * 1e6,
+                     f"bytes={int(flat.total_bytes)};"
+                     f"slow_MB={flat.inter_bytes / 1e6:.4f};"
+                     f"t_ms={flat.time_s * 1e3:.2f}"))
+
+        d2 = round_cost(_depth2_sync(preset), n_params)
+        same = all(getattr(d2, f) == getattr(flat, f) for f in
+                   ("intra_bytes", "inter_bytes", "time_s", "serial_time_s",
+                    "encoded_bits", "analytic_bits"))
+        assert same, (preset, d2, flat)  # acceptance: depth-2 == flat hier
+        rows.append((f"hier_tree/{preset}_depth2", d2.time_s * 1e6,
+                     f"bytes={int(d2.total_bytes)};matches_flat={same}"))
+
+        tree_name, lvls = TREE_LEVELS[preset]
+        tcost = round_cost(SyncConfig(mode="hier", topology=tree_name,
+                                      levels=lvls), n_params)
+        slow = _slow_bytes(tcost, flat_topo.inter.gbps)
+        detail = ",".join(f"{lv.name}:{lv.bytes_per_round / 1e6:.3f}MB"
+                          for lv in tcost.levels)
+        if preset == "edge_fl":
+            # acceptance: per-level compression strictly reduces slow-link
+            # bytes AND round time vs flat hier at the same uplink period
+            assert slow < flat.inter_bytes, (slow, flat.inter_bytes)
+            assert tcost.time_s < flat.time_s, (tcost.time_s, flat.time_s)
+        rows.append((f"hier_tree/{preset}_tree_d{len(lvls)}",
+                     tcost.time_s * 1e6,
+                     f"bytes={int(tcost.total_bytes)};"
+                     f"slow_MB={slow / 1e6:.4f};"
+                     f"speedup_vs_flat={flat.time_s / tcost.time_s:.2f};"
+                     f"levels={detail}"))
+
+        led = round_ledger(SyncConfig(mode="hier", topology=tree_name,
+                                      levels=lvls), n_params)
+        n_rounds = led.n_rounds()
+        per_round = led.total_bytes / n_rounds
+        drift = abs(per_round - tcost.total_bytes) / tcost.total_bytes
+        assert drift < 1e-6, (per_round, tcost.total_bytes)
+        rows.append((f"hier_tree/ledger_{preset}", 0.0,
+                     f"bytes={led.total_bytes};rounds={n_rounds};"
+                     f"levels={len(led.bytes_by_tag())};"
+                     f"per_round_matches_cost={drift < 1e-6}"))
+    return rows
+
+
+def _sweep_rows(n_params: int):
+    """Depth x base-period x uplink-compressor sweep on the edge hierarchy."""
+    flat = round_cost(_flat_sync("edge_fl"), n_params)
+    depth_cfgs = {
+        2: ("edge_fl", lambda p, c: (
+            LevelConfig("intra", 1, "identity"),
+            LevelConfig("inter", p, c, 0.05, 8))),
+        3: ("edge_fl_tree", lambda p, c: (
+            LevelConfig("uplink", p, c, 0.05, 8),
+            LevelConfig("metro", 2 * p, "qsgd", quant_bits=8),
+            LevelConfig("wan", 4 * p, "top_k", 0.01))),
+        4: ("edge_fl_tree4", lambda p, c: (
+            LevelConfig("uplink", p, c, 0.05, 8),
+            LevelConfig("metro", 2 * p, "qsgd", quant_bits=8),
+            LevelConfig("zone", 4 * p, "top_k", 0.02),
+            LevelConfig("wan", 8 * p, "top_k", 0.01))),
+    }
+    rows = []
+    for depth, (topo_name, mk) in depth_cfgs.items():
+        for comp in ("top_k", "qsgd"):
+            sc = SyncConfig(mode="hier", topology=topo_name,
+                            levels=mk(P, comp))
+            cost = round_cost(sc, n_params)
+            rows.append((f"hier_tree/sweep_d{depth}_p{P}_{comp}",
+                         cost.time_s * 1e6,
+                         f"bytes={int(cost.total_bytes)};"
+                         f"speedup_vs_flat={flat.time_s / cost.time_s:.2f}"))
+    for base_p in (4, 16):  # P itself is covered by the depth loop
+        sc = SyncConfig(mode="hier", topology="edge_fl_tree",
+                        levels=depth_cfgs[3][1](base_p, "top_k"))
+        cost = round_cost(sc, n_params)
+        flat_p = round_cost(_flat_sync("edge_fl", base_p), n_params)
+        rows.append((f"hier_tree/sweep_d3_p{base_p}_top_k",
+                     cost.time_s * 1e6,
+                     f"bytes={int(cost.total_bytes)};"
+                     f"speedup_vs_flat={flat_p.time_s / cost.time_s:.2f}"))
+    return rows
+
+
+def run(smoke: bool = False):
+    smoke = smoke or _smoke()
+    n_params = (1 << 15) if smoke else 1_000_000
+    return _preset_rows(n_params) + _sweep_rows(n_params)
+
+
+def main():
+    emit(run(smoke="--smoke" in sys.argv[1:]))
+
+
+if __name__ == "__main__":
+    main()

@@ -4,9 +4,10 @@ Prints ``name,us_per_call,derived`` CSV rows.  The §Roofline harness
 (benchmarks/roofline.py) and the multi-pod dry-run (repro.launch.dryrun) are
 separate long-running entries — this file covers the paper-table benchmarks.
 
-The comm rows are additionally written to ``BENCH_comm.json`` (machine-
-readable: name, wall-us, bytes) so the codec/transport perf trajectory is
-tracked across PRs instead of living only in stdout.
+The comm and hier rows are additionally written to ``BENCH_comm.json`` /
+``BENCH_hier.json`` (machine-readable: name, wall-us, bytes) so the
+codec/transport/aggregation-tree perf trajectory is tracked across PRs
+instead of living only in stdout.
 """
 from __future__ import annotations
 
@@ -33,13 +34,14 @@ def write_comm_json(rows, path: str = "BENCH_comm.json") -> None:
 
 
 def main() -> None:
-    from benchmarks import bench_comm, bench_efbv, bench_fedp3, bench_kernels
-    from benchmarks import bench_scafflix, bench_scafflix_nn, bench_sppm
-    from benchmarks import bench_symwanda
+    from benchmarks import bench_comm, bench_efbv, bench_fedp3, bench_hier
+    from benchmarks import bench_kernels, bench_scafflix, bench_scafflix_nn
+    from benchmarks import bench_sppm, bench_symwanda
     from benchmarks.common import emit
 
     modules = [
         ("comm(codecs/ledger/topology)", bench_comm),
+        ("hier(aggregation-trees,Ch.5)", bench_hier),
         ("efbv(Fig2.2)", bench_efbv),
         ("scafflix(Fig3.1/3.3)", bench_scafflix),
         ("scafflix_nn(Fig3.2)", bench_scafflix_nn),
@@ -48,16 +50,21 @@ def main() -> None:
         ("symwanda(Tab6.3-6.6)", bench_symwanda),
         ("kernels", bench_kernels),
     ]
+    json_sinks = {
+        id(bench_comm): ("BENCH_COMM_JSON", "BENCH_comm.json"),
+        id(bench_hier): ("BENCH_HIER_JSON", "BENCH_hier.json"),
+    }
     print("name,us_per_call,derived")
     for label, mod in modules:
         t0 = time.time()
         try:
             rows = mod.run()
             emit(rows)
-            if mod is bench_comm:
-                path = os.environ.get("BENCH_COMM_JSON", "BENCH_comm.json")
+            if id(mod) in json_sinks:
+                env, default = json_sinks[id(mod)]
+                path = os.environ.get(env, default)
                 write_comm_json(rows, path)
-                print(f"# comm rows -> {path}", file=sys.stderr)
+                print(f"# {label} rows -> {path}", file=sys.stderr)
         except Exception as e:  # noqa: BLE001 — keep the suite going
             print(f"{label}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
         print(f"# {label} done in {time.time()-t0:.1f}s", file=sys.stderr)

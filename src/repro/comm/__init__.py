@@ -16,11 +16,16 @@ Layers:
               ring-collective timing, presets (TPU superpod / WAN / edge FL),
               and the pipelined (pack | send | unpack overlapped) round-time
               model for streamed codecs
+  tree        TreeTopology: arbitrary-depth aggregation trees (named levels,
+              per-level fanout/Link/CodecProfile) of which the flat Topology
+              is the depth-2 special case; multi-level presets
   accounting  RoundCost per sync mode (measured, amortized, simulated serial
-              + streamed time); backs distributed.bits_per_round
+              + streamed time) with per-level LevelCost attribution for
+              aggregation trees; backs distributed.bits_per_round
 """
-from repro.comm.accounting import (RoundCost, measured_payload_bits,
-                                   round_bits, round_cost)
+from repro.comm.accounting import (LevelCost, RoundCost, measured_payload_bits,
+                                   payload_bits_for, round_bits, round_cost,
+                                   round_ledger)
 from repro.comm.buckets import (DEFAULT_BUCKET_SIZE, BucketLayout, bucketize,
                                 bucketize_groups, debucketize,
                                 debucketize_groups)
@@ -31,7 +36,10 @@ from repro.comm.codecs import (DEFAULT_TILE, Chunk, Payload, StreamPayload,
 from repro.comm.ledger import CommLedger, CommRecord, crosscheck_hlo
 from repro.comm.topology import (DEFAULT_PROFILE, DEFAULT_TILE_BYTES, PRESETS,
                                  CodecProfile, Link, Topology, get_topology,
-                                 pipelined_time_s)
+                                 pipelined_time_s, ring_parts_s, ring_time_s,
+                                 stream_pipeline_s)
+from repro.comm.tree import (TREE_PRESETS, TreeLevel, TreeTopology,
+                             get_tree_topology, register_tree_topology)
 
 __all__ = [
     "Payload", "Chunk", "StreamPayload", "encode", "decode", "encode_stream",
@@ -41,6 +49,10 @@ __all__ = [
     "debucketize_groups", "DEFAULT_BUCKET_SIZE",
     "CommLedger", "CommRecord", "crosscheck_hlo",
     "Link", "Topology", "PRESETS", "get_topology", "CodecProfile",
-    "pipelined_time_s", "DEFAULT_PROFILE", "DEFAULT_TILE_BYTES",
-    "RoundCost", "round_cost", "round_bits", "measured_payload_bits",
+    "pipelined_time_s", "stream_pipeline_s", "ring_parts_s", "ring_time_s",
+    "DEFAULT_PROFILE", "DEFAULT_TILE_BYTES",
+    "TreeTopology", "TreeLevel", "TREE_PRESETS", "get_tree_topology",
+    "register_tree_topology",
+    "RoundCost", "LevelCost", "round_cost", "round_bits", "round_ledger",
+    "measured_payload_bits", "payload_bits_for",
 ]

@@ -5,23 +5,47 @@ Replaces the ad-hoc analytic bits computations that each algorithm carried
 *encoding an actual payload* with the configured compressor's codec, and the
 topology simulator turns them into per-round wall-clock.
 
-Measured sizes are obtained on a probe tensor.  Payload size per coordinate
-is constant for every registered compressor (fixed k, fixed quant blocks), so
-for very large models the probe is capped and the measured bits/coordinate is
-scaled linearly — still codec-measured, never the closed-form model.
+Measured sizes are obtained on a probe tensor.  For models larger than the
+probe cap the VALUE planes scale linearly (bits per kept coordinate are
+constant for every registered compressor), while the index-side planes —
+uint32 indices, bitpacked block-local indices, per-block counts, bitmap
+words, quantizer scales — are sized analytically from the true dimension
+(``codecs.extrapolate_bits``): a uint32 index plane is 32 bits per kept
+coordinate no matter how large d grows, whereas block-granular planes grow
+with d's block count, so pure linear scaling misstates sparse payloads.
+
+Hierarchical modes are costed per aggregation level: ``hier`` (with or
+without ``SyncConfig.levels``) runs through the tree path, so a ``RoundCost``
+carries one ``LevelCost`` per level and a per-round ledger can tag every
+record with its level name.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 
 from repro.comm import codecs
+from repro.comm.ledger import CommLedger
 from repro.comm.topology import (DEFAULT_PROFILE, DEFAULT_TILE_BYTES,
                                  CodecProfile, Topology, get_topology)
+from repro.comm.tree import TreeTopology, get_tree_topology
 
 PROBE_CAP = 1 << 20  # max coordinates actually encoded when sizing a round
+
+
+@dataclass(frozen=True)
+class LevelCost:
+    """One aggregation-tree level's share of a sync round (per child node)."""
+    name: str
+    fanout: int
+    period: int
+    compressor: str
+    link_gbps: float
+    bytes_per_round: float   # encoded bytes, amortized over the level period
+    time_s: float            # amortized simulated time (streamed if enabled)
+    serial_time_s: float     # amortized monolithic pack -> ring -> unpack
 
 
 @dataclass(frozen=True)
@@ -29,14 +53,17 @@ class RoundCost:
     """One synchronization round, per worker: encoded traffic + simulated time."""
     mode: str
     n_params: int
-    intra_bytes: float       # fast-fabric bytes per device per round
-    inter_bytes: float       # slow-link bytes per device per round
+    intra_bytes: float       # fast-fabric bytes per device per round (tree
+                             # modes: the leaf level's share)
+    inter_bytes: float       # slow-link bytes per device per round (tree
+                             # modes: every level above the leaves)
     time_s: float            # simulated wall-clock of the round (streamed
                              # pipeline when tile_bytes > 0, else serial)
     encoded_bits: float      # per-node payload bits per round (amortized)
     analytic_bits: float     # the seed's closed-form model (cross-check)
     serial_time_s: float = 0.0   # monolithic pack -> send -> unpack wall-clock
     tile_bytes: int = 0          # streamed transport tile (0 = monolithic)
+    levels: Tuple[LevelCost, ...] = ()  # per-level attribution (hier modes)
 
     @property
     def total_bytes(self) -> float:
@@ -47,27 +74,91 @@ class RoundCost:
         return self.serial_time_s / self.time_s if self.time_s > 0 else 1.0
 
 
+def payload_bits_for(c, n_params: int, key=None) -> float:
+    """Measured wire bits of one message from compressor ``c`` at dim
+    ``n_params`` (probe-capped; index planes sized analytically beyond)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    probe_d = min(int(n_params), PROBE_CAP)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (probe_d,))
+    p = codecs.encode(c, key, x)
+    if probe_d == int(n_params):
+        return float(p.nbits)
+    return codecs.extrapolate_bits(p, probe_d, int(n_params))
+
+
 def measured_payload_bits(sync, n_params: int, key=None) -> float:
     """Encode a probe gradient with the configured compressor; exact bits."""
     from repro.core.distributed import build_compressor
 
-    c = build_compressor(sync)
-    key = key if key is not None else jax.random.PRNGKey(0)
-    probe_d = min(int(n_params), PROBE_CAP)
-    x = jax.random.normal(jax.random.fold_in(key, 1), (probe_d,))
-    bits = codecs.encoded_bits(c, key, x)
-    return bits * (n_params / probe_d)
+    return payload_bits_for(build_compressor(sync), n_params, key=key)
 
 
-def round_cost(sync, n_params: int, topology: Optional[Topology] = None,
+def _hier_levels(sync):
+    """The level configs of a hier round: ``SyncConfig.levels`` verbatim, or
+    the classic two-level schedule (dense intra every step + compressed inter
+    every sync_period) when unset."""
+    from repro.configs.base import LevelConfig
+
+    if getattr(sync, "levels", None):
+        return tuple(sync.levels)
+    return (LevelConfig("intra", period=1, compressor="identity"),
+            LevelConfig("inter", period=max(1, sync.sync_period),
+                        compressor=sync.compressor,
+                        compress_ratio=sync.compress_ratio,
+                        quant_bits=sync.quant_bits))
+
+
+def _hier_tree(sync, topology: Optional[Topology]) -> TreeTopology:
+    if isinstance(topology, TreeTopology):
+        return topology
+    if topology is not None:
+        return TreeTopology.from_flat(topology)
+    return get_tree_topology(getattr(sync, "topology", "v5p_superpod"))
+
+
+def _level_costs(sync, n_params: int, tree: TreeTopology, tile_bytes: int,
+                 key=None, profile: Optional[CodecProfile] = None,
+                 ) -> Tuple[LevelCost, ...]:
+    """Per-level byte/time attribution of one tree round (per child node).
+    ``profile`` overrides every compressed level's codec profile."""
+    from repro.core.distributed import make_sync_compressor
+
+    lcfgs = _hier_levels(sync)
+    if len(lcfgs) != len(tree.levels):
+        raise ValueError(
+            f"sync has {len(lcfgs)} levels but tree topology {tree.name!r} "
+            f"has {len(tree.levels)}")
+    out = []
+    for l, (lc, tl) in enumerate(zip(lcfgs, tree.levels)):
+        period = max(1, lc.period)
+        if lc.compressor == "identity":
+            enc_bytes = 4.0 * n_params         # dense fp32, no codec
+            serial = tree.ring_time_s(l, enc_bytes)
+            stream = serial
+        else:
+            c = make_sync_compressor(lc.compressor, lc.compress_ratio,
+                                     lc.quant_bits)
+            enc_bytes = payload_bits_for(c, n_params, key=key) / 8.0
+            serial = tree.level_serial_time_s(l, enc_bytes, profile=profile)
+            stream = (tree.level_stream_time_s(l, enc_bytes, tile_bytes,
+                                               profile=profile)
+                      if tile_bytes > 0 else serial)
+        out.append(LevelCost(tl.name, tl.fanout, period, lc.compressor,
+                             tl.link.gbps, enc_bytes / period,
+                             stream / period, serial / period))
+    return tuple(out)
+
+
+def round_cost(sync, n_params: int, topology=None,
                key=None, profile: Optional[CodecProfile] = None) -> RoundCost:
     """Per-round, per-worker communication of one sync mode.
 
     dense       every round: full fp32 payload on the slow links
     efbv/ef21/diana  every round: encoded compressed delta on the slow links
     local       full fp32 payload every sync_period rounds (amortized)
-    hier        dense fp32 intra-pod every round + encoded compressed delta
-                inter-pod every sync_period rounds (Cohort-Squeeze)
+    hier        per aggregation-tree level: an encoded delta every
+                ``period[l]`` rounds on level l's link (Cohort-Squeeze); the
+                classic intra/inter schedule is the depth-2 special case
 
     Compressed payloads pay the codec: ``serial_time_s`` is the monolithic
     pack -> collective -> unpack sum; ``time_s`` is the streamed pipeline
@@ -76,24 +167,45 @@ def round_cost(sync, n_params: int, topology: Optional[Topology] = None,
     """
     from repro.core.distributed import build_compressor
 
-    topo = topology or get_topology(getattr(sync, "topology", "v5p_superpod"))
-    period = max(1, sync.sync_period)
     tile_bytes = int(getattr(sync, "stream_tile_bytes", DEFAULT_TILE_BYTES))
-    prof = profile or DEFAULT_PROFILE
     dense_bytes = 4.0 * n_params
+
+    if sync.mode == "hier":
+        tree = _hier_tree(sync, topology)
+        lvls = _level_costs(sync, n_params, tree, tile_bytes, key=key,
+                            profile=profile)
+        intra = lvls[0].bytes_per_round
+        inter = sum(lv.bytes_per_round for lv in lvls[1:])
+        serial_s = sum(lv.serial_time_s for lv in lvls)
+        stream_s = sum(lv.time_s for lv in lvls)
+        # the paper's per-node bits metric: every compressed level, plus
+        # dense non-leaf levels (fp32 on a real link); the leaf level's dense
+        # fabric sync is the one hop it excludes
+        bits = sum(8.0 * lv.bytes_per_round for l, lv in enumerate(lvls)
+                   if l > 0 or lv.compressor != "identity")
+        analytic = 0.0
+        from repro.core.distributed import make_sync_compressor
+        for l, lc in enumerate(_hier_levels(sync)):
+            if l == 0 and lc.compressor == "identity":
+                continue
+            c = make_sync_compressor(lc.compressor, lc.compress_ratio,
+                                     lc.quant_bits)
+            analytic += codecs.analytic_bits(c, n_params) / max(1, lc.period)
+        return RoundCost(sync.mode, n_params, intra, inter,
+                         stream_s if tile_bytes > 0 else serial_s,
+                         bits, analytic, serial_time_s=serial_s,
+                         tile_bytes=max(0, tile_bytes), levels=lvls)
+
+    topo = topology or get_topology(getattr(sync, "topology", "v5p_superpod"))
+    if isinstance(topo, TreeTopology):
+        raise ValueError(f"mode {sync.mode!r} takes a flat Topology")
+    period = max(1, sync.sync_period)
+    prof = profile or DEFAULT_PROFILE
     if sync.mode in ("dense", "local"):
         enc_bits = 32.0 * n_params  # fp32 on the wire, no compressor
     else:
         enc_bits = measured_payload_bits(sync, n_params, key=key)
     enc_bytes = enc_bits / 8.0
-
-    def _enc_times(nbytes, scope):
-        """(serial, streamed) wall-clock of one encoded collective."""
-        serial = topo.allreduce_serial_time_s(nbytes, scope, prof)
-        if tile_bytes <= 0:
-            return serial, serial
-        return serial, topo.allreduce_stream_time_s(nbytes, scope, tile_bytes,
-                                                    prof)
 
     if sync.mode == "dense":
         intra, inter = 0.0, dense_bytes
@@ -101,28 +213,21 @@ def round_cost(sync, n_params: int, topology: Optional[Topology] = None,
         bits = 8.0 * dense_bytes
     elif sync.mode in ("efbv", "ef21", "diana"):
         intra, inter = 0.0, enc_bytes
-        serial_s, stream_s = _enc_times(enc_bytes, "global")
+        serial_s = topo.allreduce_serial_time_s(enc_bytes, "global", prof)
+        stream_s = (topo.allreduce_stream_time_s(enc_bytes, "global",
+                                                 tile_bytes, prof)
+                    if tile_bytes > 0 else serial_s)
         bits = enc_bits
     elif sync.mode == "local":
         intra, inter = 0.0, dense_bytes / period
         serial_s = stream_s = (
             topo.allreduce_time_s(dense_bytes, scope="global") / period)
         bits = 8.0 * dense_bytes / period
-    elif sync.mode == "hier":
-        intra = dense_bytes
-        inter = enc_bytes / period
-        t_intra = topo.allreduce_time_s(dense_bytes, scope="intra")
-        t_ser, t_str = _enc_times(enc_bytes, "inter")
-        serial_s = t_intra + t_ser / period
-        stream_s = t_intra + t_str / period
-        bits = enc_bits / period
     else:
         raise KeyError(f"unknown sync mode {sync.mode!r}")
 
     c = build_compressor(sync)
     analytic = codecs.analytic_bits(c, n_params)
-    if sync.mode == "hier":
-        analytic = analytic / period
     if sync.mode == "local":
         analytic = 32.0 * n_params / period
     if sync.mode == "dense":
@@ -135,6 +240,33 @@ def round_cost(sync, n_params: int, topology: Optional[Topology] = None,
                      stream_s if tile_bytes > 0 else serial_s,
                      bits, analytic, serial_time_s=serial_s,
                      tile_bytes=max(0, tile_bytes))
+
+
+def round_ledger(sync, n_params: int, n_rounds: Optional[int] = None,
+                 topology=None, key=None) -> CommLedger:
+    """CommLedger of a hier/tree schedule: one record per level per sync
+    step, tagged with the level name (phase = level index, so the cascade's
+    bottom-up dependency shows up in the round timing model).
+
+    Defaults to one full root period of rounds, over which the per-level
+    record bytes average exactly to ``RoundCost.total_bytes`` per round.
+    """
+    if sync.mode != "hier":
+        raise ValueError("round_ledger models hier/tree schedules")
+    tree = _hier_tree(sync, topology)
+    tile_bytes = int(getattr(sync, "stream_tile_bytes", DEFAULT_TILE_BYTES))
+    lvls = _level_costs(sync, n_params, tree, tile_bytes, key=key)
+    if n_rounds is None:
+        n_rounds = lvls[-1].period
+    led = CommLedger()
+    for t in range(n_rounds):
+        for l, lv in enumerate(lvls):
+            if (t % lv.period) != (lv.period - 1):
+                continue
+            led.record(t, f"{lv.name}->up", round(lv.bytes_per_round * lv.period),
+                       kind="intra" if l == 0 else "inter", phase=l,
+                       tag=lv.name)
+    return led
 
 
 def round_bits(sync, n_params: int) -> float:

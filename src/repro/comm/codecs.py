@@ -543,6 +543,53 @@ def encoded_bits(c: Compressor, key, x, scheme: Optional[str] = None) -> int:
     return encode(c, key, x, scheme=scheme).nbits
 
 
+def extrapolate_bits(p: Payload, probe_d: int, d: int) -> float:
+    """Size a payload at dimension ``d`` from a probe encoded at ``probe_d``.
+
+    Value planes scale linearly (the probe measures exact bits per kept
+    coordinate), but index-side planes do NOT all scale with the coordinate
+    count: a uint32 index is 32 bits per kept coordinate regardless of d,
+    bitpacked block-local indices are ceil(log2 block) bits each with a byte-
+    granular stream length, and block-count/bitmap/scale planes grow with the
+    number of blocks (words) of the TRUE d.  So the index side is sized
+    analytically from d while the kept-coordinate count comes from the probe.
+    """
+    scale = d / probe_d
+    if p.scheme == "dense":
+        return 8.0 * p.planes["values"].dtype.itemsize * d
+    if p.scheme == "sparse_idx32":
+        k = int(round(p.planes["values"].shape[0] * scale))
+        return 32.0 * k + 32.0 * k           # uint32 indices + fp32 values
+    if p.scheme == "sparse_block":
+        block, nbits = p.meta["block"], p.meta["nbits"]
+        k = int(round(p.planes["values"].shape[0] * scale))
+        nb = -(-d // block)
+        return (32.0 * k                      # fp32 values (measured k)
+                + 8.0 * ((k * nbits + 7) // 8)  # bitpacked local indices
+                + 16.0 * nb)                  # uint16 per-block counts
+    if p.scheme == "sparse_bitmap":
+        k = int(round(p.planes["values"].shape[0] * scale))
+        return 32.0 * (-(-d // 32)) + 32.0 * k  # mask words + fp32 values
+    if p.scheme == "quant":
+        # integer plane is block-padded linear in d; the fp32 scale plane
+        # counts the TRUE d's blocks
+        bits = p.meta["bits"]
+        n_sc = int(p.planes["scales"].size)
+        if p.meta["axis"] == "kernel":
+            block = p.meta["qblock"]
+        else:
+            qn = int(np.prod(p.meta["qshape"]))
+            block = qn // n_sc if n_sc > 1 else 0
+        if block:
+            n_blocks = -(-d // block)
+            qd, n_scales = n_blocks * block, n_blocks
+        else:
+            qd, n_scales = d, 1               # single global scale
+        q_bytes = (qd + 1) // 2 if bits <= 4 else qd
+        return 8.0 * q_bytes + 32.0 * n_scales
+    raise ValueError(f"unknown wire scheme {p.scheme!r}")
+
+
 def analytic_bits(c: Compressor, d: int) -> float:
     """The seed's closed-form model, kept as a cross-check target."""
     return c.payload_bits(d)

@@ -111,6 +111,14 @@ class CommLedger:
             out[r.kind] += r.nbytes
         return dict(out)
 
+    def bytes_by_tag(self) -> Dict[str, int]:
+        """Per-tag byte totals (aggregation-tree rounds tag records with the
+        level name, so this is the per-level attribution)."""
+        out: Dict[str, int] = defaultdict(int)
+        for r in self.records:
+            out[r.tag] += r.nbytes
+        return dict(out)
+
     def cumulative_bytes(self) -> List[int]:
         """Running total after each round 0..n_rounds-1 (Fig 2.2 x-axis)."""
         per = self.bytes_by_round()

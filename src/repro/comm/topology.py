@@ -62,6 +62,40 @@ def pipelined_time_s(stage_totals_s: Sequence[float], n_tiles: int) -> float:
     return fill + max(stage_totals_s) * (n - 1) / n
 
 
+def stream_pipeline_s(lat_s: float, pack_total_s: float, wire_total_s: float,
+                      unpack_total_s: float, n_tiles: int) -> float:
+    """Streamed pack | send | unpack pipeline with per-tile wire latency.
+
+    Every tile pays the wire's per-message latency, but tiles overlap in
+    flight (the wire is itself a pipeline), so the full per-pass latency
+    surfaces exactly once — in the fill, where the first tile traverses the
+    wire end to end — while steady state is paced by the slowest
+    bandwidth/codec stage.  ``lat_s`` is the latency of ONE tile's complete
+    traversal: a point-to-point message pays one hop, a ring collective pays
+    its full 2*(g-1) per-step latencies — the same per-message charge the
+    serial path pays, never amortized over the tile count.  The result can
+    therefore never beat either the bandwidth-only lower bound
+    (``wire_total_s``) or the latency floor (``lat_s``).
+    """
+    return lat_s + pipelined_time_s(
+        (pack_total_s, wire_total_s, unpack_total_s), n_tiles)
+
+
+def ring_parts_s(link: "Link", g: int, nbytes: float) -> tuple:
+    """(latency_s, bandwidth_s) decomposition of a ring all-reduce pass."""
+    if g <= 1:
+        return 0.0, 0.0
+    steps = 2 * (g - 1)
+    return steps * link.latency_us * 1e-6, (
+        2.0 * (g - 1) / g * float(nbytes)) / (link.gbps * 1e9)
+
+
+def ring_time_s(link: "Link", g: int, nbytes: float) -> float:
+    """Ring all-reduce of an nbytes-per-node buffer over g nodes on one link."""
+    lat_s, bw_s = ring_parts_s(link, g, nbytes)
+    return lat_s + bw_s
+
+
 @dataclass(frozen=True)
 class Link:
     """One link class: sustained bandwidth (GB/s) + per-message latency."""
@@ -81,13 +115,14 @@ class Link:
     def stream_time_s(self, nbytes: float,
                       tile_bytes: int = DEFAULT_TILE_BYTES,
                       profile: CodecProfile = DEFAULT_PROFILE) -> float:
-        """Streamed path: per-tile pack/send/unpack overlap; one end-to-end
-        latency is paid in the fill (tiles pipeline through the wire)."""
+        """Streamed path: per-tile pack/send/unpack overlap.  Each tile pays
+        the per-message latency, overlapped in flight, so one full hop
+        latency lands in the fill (see ``stream_pipeline_s``)."""
         n_tiles = max(1, -(-int(nbytes) // int(tile_bytes)))
-        stages = (profile.pack_s(nbytes),
-                  float(nbytes) / (self.gbps * 1e9),
-                  profile.unpack_s(nbytes))
-        return self.latency_us * 1e-6 + pipelined_time_s(stages, n_tiles)
+        return stream_pipeline_s(self.latency_us * 1e-6,
+                                 profile.pack_s(nbytes),
+                                 float(nbytes) / (self.gbps * 1e9),
+                                 profile.unpack_s(nbytes), n_tiles)
 
 
 @dataclass(frozen=True)
@@ -135,33 +170,51 @@ class Topology:
         return (profile.pack_s(nbytes) + self.allreduce_time_s(nbytes, scope)
                 + profile.unpack_s(nbytes))
 
+    def allreduce_parts_s(self, nbytes: float, scope: str = "intra") -> tuple:
+        """(latency_s, bandwidth_s) decomposition of one all-reduce pass:
+        the per-message ring-step latencies vs the bytes/bandwidth term."""
+        if scope == "intra":
+            return ring_parts_s(self.intra, self.devices_per_pod, nbytes)
+        if scope == "inter":
+            return ring_parts_s(self.inter, self.n_pods, nbytes)
+        if scope == "global":
+            hl, hb = self._ring_half_parts(self.intra, self.devices_per_pod,
+                                           nbytes)
+            il, ib = ring_parts_s(self.inter, self.n_pods, nbytes)
+            return 2 * hl + il, 2 * hb + ib
+        raise KeyError(f"unknown scope {scope!r}")
+
     def allreduce_stream_time_s(self, nbytes: float, scope: str = "intra",
                                 tile_bytes: int = DEFAULT_TILE_BYTES,
                                 profile: CodecProfile = DEFAULT_PROFILE) -> float:
         """Streamed compressed all-reduce: tiles of the encoded buffer enter
-        the ring as soon as they are packed, and decode as they land."""
+        the ring as soon as they are packed, and decode as they land.  The
+        per-tile ring pays its full per-step latencies — the same charge the
+        serial path pays — surfaced once in the fill (tiles overlap in
+        flight); only the bandwidth/codec stages amortize over tiles, so a
+        codec-bound pipeline can no longer hide the ring's latency floor."""
         n_tiles = max(1, -(-int(nbytes) // int(tile_bytes)))
-        stages = (profile.pack_s(nbytes),
-                  self.allreduce_time_s(nbytes, scope),
-                  profile.unpack_s(nbytes))
-        return pipelined_time_s(stages, n_tiles)
+        lat_s, bw_s = self.allreduce_parts_s(nbytes, scope)
+        return stream_pipeline_s(lat_s, profile.pack_s(nbytes), bw_s,
+                                 profile.unpack_s(nbytes), n_tiles)
 
     @staticmethod
     def _ring(link: Link, g: int, nbytes: float) -> float:
+        return ring_time_s(link, g, nbytes)
+
+    @staticmethod
+    def _ring_half_parts(link: Link, g: int, nbytes: float) -> tuple:
         if g <= 1:
-            return 0.0
-        steps = 2 * (g - 1)
-        return steps * link.latency_us * 1e-6 + (
-            2.0 * (g - 1) / g * float(nbytes)) / (link.gbps * 1e9)
+            return 0.0, 0.0
+        steps = g - 1
+        return steps * link.latency_us * 1e-6, (
+            (g - 1) / g * float(nbytes)) / (link.gbps * 1e9)
 
     @staticmethod
     def _ring_half(link: Link, g: int, nbytes: float) -> float:
         """Reduce-scatter or all-gather half of the ring."""
-        if g <= 1:
-            return 0.0
-        steps = g - 1
-        return steps * link.latency_us * 1e-6 + (
-            (g - 1) / g * float(nbytes)) / (link.gbps * 1e9)
+        lat_s, bw_s = Topology._ring_half_parts(link, g, nbytes)
+        return lat_s + bw_s
 
 
 # ---------------------------------------------------------------------------

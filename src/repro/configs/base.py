@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field, replace
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
 # Layer kinds used by the interleave schedule (jamba, llama4 iRoPE, ...)
@@ -224,6 +224,23 @@ INPUT_SHAPES = {
 # Training / sync configuration (the paper's knobs)
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
+class LevelConfig:
+    """One level of an aggregation tree's sync cascade (leaf-most first).
+
+    Pairs by order with the levels of the ``repro.comm.tree`` topology named
+    by ``SyncConfig.topology``: each level keeps its own anchor, syncing every
+    ``period`` steps through its own compressor.  Periods must be nested —
+    each level's period a multiple of the level below — so a level only syncs
+    on steps where every faster level underneath it also syncs.
+    """
+    name: str
+    period: int = 1
+    compressor: str = "identity"      # see core/compressors.py registry
+    compress_ratio: float = 0.05
+    quant_bits: int = 8
+
+
+@dataclass(frozen=True)
 class SyncConfig:
     """How gradients are synchronized across the data/pod mesh axes.
 
@@ -236,7 +253,10 @@ class SyncConfig:
       local    - Scafflix-style local training: sync every ``sync_period``
                  steps (expected value of prob-p skipping), control variates on
       hier     - Cohort-Squeeze hierarchical: dense intra-pod reduce every
-                 step, compressed inter-pod reduce every ``sync_period`` steps
+                 step, compressed inter-pod reduce every ``sync_period`` steps.
+                 With ``levels`` set, the two-level schedule generalizes to an
+                 arbitrary-depth aggregation tree (repro.comm.tree): one
+                 anchor, period and compressor per level, leaf-most first.
     """
     mode: str = "dense"
     compressor: str = "topk_block"    # see core/compressors.py registry
@@ -244,9 +264,14 @@ class SyncConfig:
     quant_bits: int = 8
     sync_period: int = 1              # Scafflix E[1/p]
     personalization_alpha: float = 1.0  # FLIX alpha (1 = no personalization)
-    # link topology preset (repro.comm.topology.PRESETS) used to turn
+    # link topology preset (repro.comm.topology.PRESETS, or a tree preset
+    # from repro.comm.tree.TREE_PRESETS when ``levels`` is set) used to turn
     # per-round encoded bytes into simulated wall-clock
     topology: str = "v5p_superpod"
+    # aggregation-tree cascade (mode="hier"): per-level sync periods and
+    # compressors, leaf-most first, paired by order with the tree topology's
+    # levels.  None = the classic two-level hier schedule.
+    levels: Optional[Tuple[LevelConfig, ...]] = None
     # bucket fusion (repro.comm.buckets): the sync pytree is flattened into
     # fixed-size fp32 buckets so one fused compressor/codec pass replaces the
     # per-leaf kernel loop.  0 = legacy per-leaf path.

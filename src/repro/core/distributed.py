@@ -24,7 +24,7 @@ Modes (SyncConfig.mode):
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,19 +43,83 @@ class SyncState(NamedTuple):
     step: jax.Array
 
 
-def build_compressor(sync: SyncConfig) -> Compressor:
-    if sync.compressor == "topk_block":
-        return comp_lib.block_top_k(sync.compress_ratio)
-    if sync.compressor == "rand_k":
-        return comp_lib.rand_k(sync.compress_ratio)
-    if sync.compressor == "top_k":
-        return comp_lib.top_k(sync.compress_ratio)
-    if sync.compressor == "qsgd":
+class TreeSyncState(NamedTuple):
+    """Anchor cascade state for aggregation-tree sync (mode=hier + levels).
+
+    ``anchors[l]`` is level l's anchor pytree, leaf-most level first: leaves
+    carry a leading node axis of size n_parents(l), except the root (last
+    level), whose anchor is unstacked — exactly ``SyncState.h_bar``'s shape,
+    making the depth-1 cascade the classic hier state."""
+    anchors: Tuple[object, ...]
+    step: jax.Array
+
+
+class CascadeLevel(NamedTuple):
+    """Runtime spec of one cascade level (built from LevelConfig + tree)."""
+    name: str
+    compressor: Compressor
+    lam: float
+    period: int
+    fanout: int
+
+
+def make_sync_compressor(name: str, compress_ratio: float,
+                         quant_bits: int) -> Compressor:
+    """The registry mapping the runtime sync paths use (qsgd resolves to the
+    sharded last-dim variant so 2D-sharded leaves stay unflattened)."""
+    if name == "topk_block":
+        return comp_lib.block_top_k(compress_ratio)
+    if name == "rand_k":
+        return comp_lib.rand_k(compress_ratio)
+    if name == "top_k":
+        return comp_lib.top_k(compress_ratio)
+    if name == "qsgd":
         # runtime paths operate on sharded param/grad leaves: last-dim blocks
-        return comp_lib.qsgd_sharded(sync.quant_bits)
-    if sync.compressor == "identity":
+        return comp_lib.qsgd_sharded(quant_bits)
+    if name == "identity":
         return comp_lib.identity()
-    return comp_lib.make_compressor(sync.compressor)
+    return comp_lib.make_compressor(name)
+
+
+def build_compressor(sync: SyncConfig) -> Compressor:
+    return make_sync_compressor(sync.compressor, sync.compress_ratio,
+                                sync.quant_bits)
+
+
+def build_cascade(sync: SyncConfig, tree=None) -> Tuple[CascadeLevel, ...]:
+    """Resolve ``SyncConfig.levels`` against the (tree) topology preset.
+
+    Level l's lambda comes from the compressor calculus (lambda_star) like
+    the flat hier mode; fanouts come from the tree topology, paired by order.
+    Periods must be nested (each a multiple of the level below) so that a
+    level only syncs on steps where everything underneath it syncs too.
+    """
+    from repro.comm.tree import get_tree_topology
+
+    if not sync.levels:
+        raise ValueError("build_cascade needs SyncConfig.levels")
+    if tree is None:
+        tree = get_tree_topology(sync.topology)
+    if len(sync.levels) != len(tree.levels):
+        raise ValueError(
+            f"SyncConfig.levels has {len(sync.levels)} levels but tree "
+            f"topology {tree.name!r} has {len(tree.levels)}")
+    out, prev = [], None
+    for lc, tl in zip(sync.levels, tree.levels):
+        c = make_sync_compressor(lc.compressor, lc.compress_ratio,
+                                 lc.quant_bits)
+        if lc.period < 1:
+            raise ValueError(f"level {lc.name!r}: period must be >= 1")
+        if prev is not None and lc.period % prev != 0:
+            raise ValueError(
+                f"level {lc.name!r}: period {lc.period} is not a multiple of "
+                f"the level below ({prev}); cascade periods must be nested")
+        lam = (comp_lib.lambda_star(c.eta, c.omega)
+               if c.eta is not None and c.omega is not None else 1.0)
+        out.append(CascadeLevel(lc.name or tl.name, c, lam, lc.period,
+                                tl.fanout))
+        prev = lc.period
+    return tuple(out)
 
 
 def sync_state_init(params, n_groups: int, sync: SyncConfig,
@@ -174,6 +238,220 @@ def _efbv_sync_leaves(key, grads_g, state: SyncState, c: Compressor,
     )
 
 
+def tree_sync_state_init(params, levels: Sequence[CascadeLevel]) -> TreeSyncState:
+    """Anchors for every cascade level, all seeded from the shared params."""
+    n = 1
+    for lev in levels:
+        n *= lev.fanout
+    anchors = []
+    for l, lev in enumerate(levels):
+        n //= lev.fanout
+        if l == len(levels) - 1:
+            anchors.append(tree_map(lambda p: p.astype(jnp.float32), params))
+        else:
+            anchors.append(tree_map(
+                lambda p, n=n: jnp.broadcast_to(
+                    p.astype(jnp.float32)[None], (n,) + p.shape), params))
+    return TreeSyncState(anchors=tuple(anchors), step=jnp.zeros((), jnp.int32))
+
+
+def _level_key(key, l: int, n_levels: int):
+    """Per-level PRNG key, stable under added depth: keyed by distance from
+    the root so the top (inter) level of any cascade draws the same noise as
+    the classic single-level ``hier_param_sync``."""
+    dist = n_levels - 1 - l
+    return key if dist == 0 else jax.random.fold_in(key, dist)
+
+
+def tree_param_sync(key, params_g, state: TreeSyncState,
+                    levels: Sequence[CascadeLevel],
+                    bucket_size: Optional[int] = None):
+    """Multi-level anchor cascade (Cohort-Squeeze beyond two levels).
+
+    params_g: pytree with leading leaf axis G = prod(fanout_l) — one training
+    replica per tree leaf.  Level l (leaf-most first) keeps one anchor per
+    aggregator node; every ``period[l]`` steps its children (the leaves for
+    l=0, the level-(l-1) anchors above that) sync through a compressed EF21
+    delta against their parent anchor:
+
+        d_i        = C_l(child_i - anchor_parent)
+        anchor    += lam_l * mean_i d_i
+        child_i   <- anchor            (the whole subtree adopts — see below)
+
+    Periods are nested (validated by ``build_cascade``): a level only syncs
+    on steps where every level below it also syncs, so one bottom-up pass
+    folds fresh leaf progress into each anchor before it is pushed upward,
+    and a final top-down pass makes every node below the highest synced
+    level adopt that ancestor's new anchor.  The depth-1 cascade is exactly
+    the classic ``hier_param_sync`` (which now wraps this), and a depth-2
+    [intra=identity/period 1, inter=C/period p] cascade reproduces it on the
+    per-pod means bit-for-bit.
+
+    Like ``efbv_sync`` the tree is bucket-fused by default; ``bucket_size=0``
+    or any sharding-safe ``flatten=False`` level compressor selects the
+    per-leaf path.  Returns (new params_g, new TreeSyncState).
+    """
+    from repro.comm import buckets as bk
+
+    if bucket_size is None:
+        bucket_size = bk.DEFAULT_BUCKET_SIZE
+    levels = tuple(levels)
+    prev = None
+    for lev in levels:
+        if prev is not None and lev.period % prev != 0:
+            raise ValueError(
+                f"level {lev.name!r}: period {lev.period} not a multiple of "
+                f"the level below ({prev}); cascade periods must be nested")
+        prev = lev.period
+    G = jax.tree_util.tree_leaves(params_g)[0].shape[0]
+    n_expected = 1
+    for lev in levels:
+        n_expected *= lev.fanout
+    if G != n_expected:
+        raise ValueError(f"params_g has {G} leaves but cascade fanouts "
+                         f"multiply to {n_expected}")
+
+    # nested periods: the number of levels syncing this step fully describes
+    # the round (level l syncs => every level below does too)
+    n_sync = jnp.zeros((), jnp.int32)
+    for lev in levels:
+        n_sync = n_sync + ((state.step % lev.period)
+                           == (lev.period - 1)).astype(jnp.int32)
+
+    fused = bool(bucket_size) and all(lev.compressor.flatten for lev in levels)
+
+    # gate the whole sync (including the fused path's bucketize/debucketize
+    # round-trip) behind the step test, so off-period steps stay free like
+    # the old single-level lax.cond did
+    def do_sync(args):
+        params_g, anchors, n_sync = args
+        st = TreeSyncState(anchors=anchors, step=state.step)
+        if fused:
+            return _tree_sync_fused(key, params_g, st, levels, bucket_size,
+                                    n_sync)
+        return _tree_sync_leaves(key, params_g, st, levels, n_sync)
+
+    def no_sync(args):
+        params_g, anchors, _ = args
+        return params_g, anchors
+
+    new_p, new_anchors = jax.lax.cond(
+        n_sync > 0, do_sync, no_sync, (params_g, state.anchors, n_sync))
+    return new_p, TreeSyncState(anchors=new_anchors, step=state.step + 1)
+
+
+def _tree_sync_fused(key, params_g, state, levels, bucket_size, n_sync):
+    from repro.comm import buckets as bk
+
+    L = len(levels)
+    p_b, layout = bk.bucketize_groups(params_g, bucket_size)     # (G, nb, B)
+    G = p_b.shape[0]
+    anchors_b = []
+    for l in range(L):
+        if l == L - 1:
+            a_b, _ = bk.bucketize(state.anchors[l], bucket_size)  # (nb, B)
+        else:
+            a_b, _ = bk.bucketize_groups(state.anchors[l], bucket_size)
+        anchors_b.append(a_b)
+
+    def level_sync(l, child_b, parent_b):
+        lev = levels[l]
+        keys = jax.random.split(_level_key(key, l, L), child_b.shape[0])
+        if parent_b.ndim == 2:                      # root: unstacked anchor
+            d_i = _fused_compress(lev.compressor, keys, child_b - parent_b,
+                                  layout.d)
+            return parent_b + lev.lam * jnp.mean(d_i, axis=0)
+        n_par = parent_b.shape[0]
+        f = child_b.shape[0] // n_par
+        d_i = _fused_compress(lev.compressor, keys,
+                              child_b - jnp.repeat(parent_b, f, axis=0),
+                              layout.d)
+        return parent_b + lev.lam * jnp.mean(
+            d_i.reshape((n_par, f) + d_i.shape[1:]), axis=1)
+
+    def make_branch(j):
+        def branch(args):
+            p_b, anchors = args
+            anchors = list(anchors)
+            child = p_b
+            for l in range(j):
+                anchors[l] = level_sync(l, child, anchors[l])
+                child = anchors[l] if anchors[l].ndim == 3 else anchors[l][None]
+            if j:
+                top = anchors[j - 1]
+                top_s = top if top.ndim == 3 else top[None]
+                for l in range(j - 1):
+                    reps = anchors[l].shape[0] // top_s.shape[0]
+                    anchors[l] = jnp.repeat(top_s, reps, axis=0)
+                p_out = jnp.repeat(top_s, G // top_s.shape[0], axis=0)
+            else:
+                p_out = p_b
+            return p_out, tuple(anchors)
+        return branch
+
+    p_out, anchors_out = jax.lax.switch(
+        n_sync, [make_branch(j) for j in range(L + 1)], (p_b, tuple(anchors_b)))
+    new_anchors = tuple(
+        bk.debucketize(anchors_out[l], layout, dtype=jnp.float32)
+        if l == L - 1 else
+        bk.debucketize_groups(anchors_out[l], layout, dtype=jnp.float32)
+        for l in range(L))
+    return bk.debucketize_groups(p_out, layout), new_anchors
+
+
+def _tree_sync_leaves(key, params_g, state, levels, n_sync):
+    """Per-leaf cascade (one compressor kernel per pytree leaf per level)."""
+    L = len(levels)
+    leaves, treedef = jax.tree_util.tree_flatten(params_g)
+    anchors_lv = [tuple(treedef.flatten_up_to(a)) for a in state.anchors]
+
+    def level_sync(l, li, child, parent):
+        lev = levels[l]
+        keys = jax.random.split(
+            jax.random.fold_in(_level_key(key, l, L), li), child.shape[0])
+        delta = child.astype(jnp.float32)
+        if parent.ndim == child.ndim:               # stacked (non-root) anchor
+            n_par = parent.shape[0]
+            f = child.shape[0] // n_par
+            delta = delta - jnp.repeat(parent, f, axis=0)
+            d_i = jax.vmap(lambda k, v: lev.compressor(k, v))(keys, delta)
+            return parent + lev.lam * jnp.mean(
+                d_i.reshape((n_par, f) + d_i.shape[1:]), axis=1)
+        d_i = jax.vmap(lambda k, v: lev.compressor(k, v))(keys, delta - parent)
+        return parent + lev.lam * jnp.mean(d_i, axis=0)
+
+    def make_branch(j):
+        def branch(args):
+            leaves, anchors = args
+            anchors = [list(a) for a in anchors]
+            new_leaves = list(leaves)
+            for li, p in enumerate(leaves):
+                child = p
+                for l in range(j):
+                    anchors[l][li] = level_sync(l, li, child, anchors[l][li])
+                    a = anchors[l][li]
+                    child = a if a.ndim == p.ndim else a[None]
+                if j:
+                    top = anchors[j - 1][li]
+                    top_s = top if top.ndim == p.ndim else top[None]
+                    for l in range(j - 1):
+                        reps = anchors[l][li].shape[0] // top_s.shape[0]
+                        anchors[l][li] = jnp.repeat(top_s, reps, axis=0)
+                    new_leaves[li] = jnp.repeat(
+                        top_s.astype(p.dtype), p.shape[0] // top_s.shape[0],
+                        axis=0) if top_s.shape[0] > 1 else jnp.broadcast_to(
+                            top_s[0].astype(p.dtype)[None], p.shape)
+            return tuple(new_leaves), tuple(tuple(a) for a in anchors)
+        return branch
+
+    leaves_out, anchors_out = jax.lax.switch(
+        n_sync, [make_branch(j) for j in range(L + 1)],
+        (tuple(leaves), tuple(anchors_lv)))
+    unf = jax.tree_util.tree_unflatten
+    new_anchors = tuple(unf(treedef, list(a)) for a in anchors_out)
+    return unf(treedef, list(leaves_out)), new_anchors
+
+
 def hier_param_sync(key, params_g, state: SyncState, c: Compressor, lam: float,
                     period: int, bucket_size: Optional[int] = None):
     """Cohort-Squeeze / local training on the fabric (param-level EF21 sync).
@@ -191,54 +469,18 @@ def hier_param_sync(key, params_g, state: SyncState, c: Compressor, lam: float,
     (FedAvg); with top-k/qsgd the inter-group traffic carries only the
     compressed delta.  Returns (new params_g, new state).
 
-    Like ``efbv_sync``, the parameter tree is bucket-fused by default: the
-    whole delta is compressed in one vmapped call per group instead of one
-    kernel per leaf (``bucket_size=0`` restores the per-leaf loop, and
-    sharding-safe ``flatten=False`` compressors always take it — see
-    ``efbv_sync``).
+    This is the depth-1 special case of ``tree_param_sync`` — one cascade
+    level whose fanout is the whole group axis.  Like ``efbv_sync``, the
+    parameter tree is bucket-fused by default (``bucket_size=0`` restores the
+    per-leaf loop, and sharding-safe ``flatten=False`` compressors always
+    take it — see ``efbv_sync``).
     """
-    from repro.comm import buckets as bk
-
-    if bucket_size is None:
-        bucket_size = bk.DEFAULT_BUCKET_SIZE
-    do_sync = (state.step % period) == (period - 1)
-
-    def sync_fused(args):
-        params_g, state = args
-        p_b, layout = bk.bucketize_groups(params_g, bucket_size)   # (G, nb, B)
-        hb_b, _ = bk.bucketize(state.h_bar, bucket_size)
-        keys = jax.random.split(key, p_b.shape[0])
-        d_i = _fused_compress(c, keys, p_b - hb_b, layout.d)
-        hb2 = hb_b + lam * jnp.mean(d_i, axis=0)
-        new_hb = bk.debucketize(hb2, layout, dtype=jnp.float32)
-        new_p = tree_map(
-            lambda hb, p: jnp.broadcast_to(hb.astype(p.dtype)[None], p.shape),
-            new_hb, params_g)
-        return new_p, SyncState(h=state.h, h_bar=new_hb, step=state.step + 1)
-
-    def sync_leaves(args):
-        params_g, state = args
-        leaves, treedef = jax.tree_util.tree_flatten(params_g)
-        hb_leaves = treedef.flatten_up_to(state.h_bar)
-        G = leaves[0].shape[0]
-        new_p, new_hb = [], []
-        for li, (p, hb) in enumerate(zip(leaves, hb_leaves)):
-            keys = jax.random.split(jax.random.fold_in(key, li), G)
-            delta = p.astype(jnp.float32) - hb
-            d_i = jax.vmap(lambda k, v: c(k, v))(keys, delta)
-            hb2 = hb + lam * jnp.mean(d_i, axis=0)
-            new_hb.append(hb2)
-            new_p.append(jnp.broadcast_to(hb2.astype(p.dtype)[None], p.shape))
-        unf = jax.tree_util.tree_unflatten
-        return unf(treedef, new_p), SyncState(
-            h=state.h, h_bar=unf(treedef, new_hb), step=state.step + 1)
-
-    def local_branch(args):
-        params_g, state = args
-        return params_g, SyncState(h=state.h, h_bar=state.h_bar, step=state.step + 1)
-
-    sync_branch = sync_fused if (bucket_size and c.flatten) else sync_leaves
-    return jax.lax.cond(do_sync, sync_branch, local_branch, (params_g, state))
+    G = jax.tree_util.tree_leaves(params_g)[0].shape[0]
+    lev = CascadeLevel("inter", c, lam, int(period), G)
+    tstate = TreeSyncState(anchors=(state.h_bar,), step=state.step)
+    new_p, ts = tree_param_sync(key, params_g, tstate, (lev,),
+                                bucket_size=bucket_size)
+    return new_p, SyncState(h=state.h, h_bar=ts.anchors[0], step=ts.step)
 
 
 # ---------------------------------------------------------------------------

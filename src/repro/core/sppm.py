@@ -110,16 +110,29 @@ def balanced_blocks(features: np.ndarray, n_blocks: int) -> List[np.ndarray]:
 def kmeans_blocks(features: np.ndarray, n_blocks: int, seed: int = 0,
                   iters: int = 50) -> List[np.ndarray]:
     """Plain k-means on client features (the paper's clustering heuristic for
-    SS); returns non-empty clusters as index arrays."""
+    SS); returns non-empty clusters as index arrays.
+
+    Empty clusters are re-seeded from the points farthest from their current
+    centers (classic k-means++-style repair): a stale center left in place
+    can shadow a live one forever, collapsing the block count — stratified
+    sampling then silently draws from fewer strata than requested."""
     rng = np.random.default_rng(seed)
     n = features.shape[0]
-    centers = features[rng.choice(n, size=n_blocks, replace=False)]
+    centers = features[rng.choice(n, size=n_blocks, replace=False)].astype(float)
+    assign = np.zeros(n, dtype=int)
     for _ in range(iters):
         dist = ((features[:, None] - centers[None]) ** 2).sum(-1)
         assign = dist.argmin(1)
+        nearest = dist.min(1)
         for j in range(n_blocks):
-            if (assign == j).any():
-                centers[j] = features[assign == j].mean(0)
+            members = assign == j
+            if members.any():
+                centers[j] = features[members].mean(0)
+            else:
+                far = int(np.argmax(nearest))
+                centers[j] = features[far]
+                assign[far] = j
+                nearest[far] = -np.inf  # next empty cluster picks a new point
     blocks = [np.flatnonzero(assign == j) for j in range(n_blocks)]
     return [b for b in blocks if len(b)]
 
@@ -134,8 +147,6 @@ def sigma_star_nice(prob, x_star: np.ndarray, tau: int, n_mc: int = 512, seed: i
     rng = np.random.default_rng(seed)
     n = prob.n_clients
     gi = _client_grads_at(prob, x_star)            # (n, d)
-    gbar = gi.mean(0)                              # ~0 at optimum
-    s1 = np.mean(np.sum((gi - gbar) ** 2, axis=1)) + np.sum(gbar**2)
     closed = (n / tau - 1) / max(n - 1, 1) * np.mean(np.sum(gi**2, axis=1))
     acc = 0.0
     for _ in range(n_mc):

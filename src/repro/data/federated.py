@@ -39,15 +39,19 @@ def classwise_split(labels: np.ndarray, n_clients: int, classes_per_client: int 
     pools = {c: list(np.flatnonzero(labels == c)) for c in classes}
     for c in pools:
         rng.shuffle(pools[c])
+    # counts is positional: index by the class's position in `classes`, not by
+    # the raw label value (non-contiguous label sets like {1, 3, 7} would
+    # crash or silently credit the wrong class)
+    pos = {c: i for i, c in enumerate(classes)}
     counts = np.zeros(len(classes), dtype=int)
     for a in assign:
         for c in a:
-            counts[c] += 1
+            counts[pos[c]] += 1
     client_idx: List[list] = [[] for _ in range(n_clients)]
     for i, a in enumerate(assign):
         for c in a:
             pool = pools[c]
-            take = max(1, len(pool) // counts[c])
+            take = max(1, len(pool) // counts[pos[c]])
             client_idx[i].extend(pool[:take])
             pools[c] = pool[take:]
     return [np.asarray(sorted(ix), dtype=np.int64) for ix in client_idx]

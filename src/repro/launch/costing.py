@@ -148,25 +148,43 @@ def comm_time_model(measures: Dict[str, float], topology=None,
     are not attributable here — the per-round latency-aware model lives in
     repro.comm (Topology.allreduce_time_s / CommLedger.round_time_s).
 
+    ``topology`` may also be a ``repro.comm.tree.TreeTopology``: the leaf
+    level's fabric carries the intra share and the inter share hops every
+    level above it in turn (device -> host -> region -> cloud), reported as
+    one ``t_<level>_s`` term per level.
+
     With ``tile_bytes > 0`` the report adds ``t_comm_stream_s``: the
-    hierarchical schedule streamed per tile, so the intra-pod reduce of tile
-    k+1 overlaps the inter-pod transfer of tile k (repro.comm.topology's
+    hierarchical schedule streamed per tile, so each hop's transfer of tile
+    k+1 overlaps the next hop's transfer of tile k (repro.comm.topology's
     pipelined model); serial t_comm_s stays the sum.
     """
     from repro.comm.topology import get_topology, pipelined_time_s
+    from repro.comm.tree import TreeTopology
 
     topo = topology or get_topology("v5p_superpod")
     total = float(measures.get("coll_total", 0.0))
     inter = float(measures.get("coll_interpod", 0.0))
     intra = max(0.0, total - inter)
-    t_intra = intra / (topo.intra.gbps * 1e9)
-    t_inter = inter / (topo.inter.gbps * 1e9)
-    out = {"intra_bytes": intra, "inter_bytes": inter,
-           "t_intra_s": t_intra, "t_inter_s": t_inter,
-           "t_comm_s": t_intra + t_inter, "topology": topo.name}
+    if isinstance(topo, TreeTopology):
+        t_intra = intra / (topo.levels[0].link.gbps * 1e9)
+        stages = [t_intra]
+        out = {"intra_bytes": intra, "inter_bytes": inter,
+               f"t_{topo.levels[0].name}_s": t_intra, "topology": topo.name}
+        for lev in topo.levels[1:]:
+            t = inter / (lev.link.gbps * 1e9)
+            out[f"t_{lev.name}_s"] = t
+            stages.append(t)
+        out["t_comm_s"] = sum(stages)
+    else:
+        t_intra = intra / (topo.intra.gbps * 1e9)
+        t_inter = inter / (topo.inter.gbps * 1e9)
+        stages = [t_intra, t_inter]
+        out = {"intra_bytes": intra, "inter_bytes": inter,
+               "t_intra_s": t_intra, "t_inter_s": t_inter,
+               "t_comm_s": t_intra + t_inter, "topology": topo.name}
     if tile_bytes > 0:
         n_tiles = max(1, -(-int(total) // int(tile_bytes)))
-        out["t_comm_stream_s"] = pipelined_time_s((t_intra, t_inter), n_tiles)
+        out["t_comm_stream_s"] = pipelined_time_s(tuple(stages), n_tiles)
         out["stream_tile_bytes"] = int(tile_bytes)
     return out
 

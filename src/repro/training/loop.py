@@ -45,6 +45,11 @@ def train(cfg: ModelConfig, tc: TrainConfig, batches: Iterator[dict],
                  (f" + {cost.intra_bytes / 1e6:.1f} MB intra-pod"
                   if cost.intra_bytes else ""),
                  cost.time_s * 1e3, tc.sync.topology, stream)
+        for lv in cost.levels:
+            log.info("  level %-8s fanout %3d period %3d %-10s "
+                     "%.3f MB/round  %.2f ms/round",
+                     lv.name, lv.fanout, lv.period, lv.compressor,
+                     lv.bytes_per_round / 1e6, lv.time_s * 1e3)
 
     history = []
     t0 = time.time()

@@ -45,15 +45,29 @@ def _make_optimizer(tc: TrainConfig):
     return make_optimizer(tc.optimizer, sched, weight_decay=tc.weight_decay)
 
 
+def _cascade_leaves(cascade) -> int:
+    n = 1
+    for lev in cascade:
+        n *= lev.fanout
+    return n
+
+
 def init_train_state(key, params, tc: TrainConfig, n_groups: int, n_pods: int):
     opt = _make_optimizer(tc)
     mode = tc.sync.mode
     if mode in ("hier", "local"):
-        G = n_pods if mode == "hier" else n_groups
+        if mode == "hier" and tc.sync.levels:
+            # aggregation tree: one replica per tree leaf, one anchor per level
+            cascade = dist.build_cascade(tc.sync)
+            G = _cascade_leaves(cascade)
+            sync_state = dist.tree_sync_state_init(params, cascade)
+        else:
+            G = n_pods if mode == "hier" else n_groups
+            h_bar = tree_map(lambda p: p.astype(jnp.float32), params)
+            sync_state = dist.SyncState(h=(), h_bar=h_bar,
+                                        step=jnp.zeros((), jnp.int32))
         params_g = tree_map(lambda p: jnp.broadcast_to(p[None], (G,) + p.shape), params)
         opt_state = jax.vmap(opt.init)(params_g)
-        h_bar = tree_map(lambda p: p.astype(jnp.float32), params)
-        sync_state = dist.SyncState(h=(), h_bar=h_bar, step=jnp.zeros((), jnp.int32))
         return TrainState(params_g, opt_state, sync_state, key)
     opt_state = opt.init(params)
     sync_state = (
@@ -132,7 +146,10 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_groups: int, n_pods: in
         return TrainState(params, opt_state, sync_state, key), metrics
 
     # ---------------------------------------------------- hier / local replicas
-    G_rep = n_pods if mode == "hier" else n_groups
+    cascade = (dist.build_cascade(sync)
+               if mode == "hier" and sync.levels else None)
+    G_rep = (_cascade_leaves(cascade) if cascade
+             else (n_pods if mode == "hier" else n_groups))
 
     def local_step(state: TrainState, batch):
         key, sub = jax.random.split(state.key)
@@ -146,9 +163,14 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_groups: int, n_pods: in
 
         params_g, opt_state, loss_g, gnorm_g = jax.vmap(one_group)(
             state.params, state.opt_state, gbatch)
-        params_g, sync_state = dist.hier_param_sync(
-            sub, params_g, state.sync_state, compressor, lam, sync.sync_period,
-            bucket_size=sync.bucket_size)
+        if cascade:
+            params_g, sync_state = dist.tree_param_sync(
+                sub, params_g, state.sync_state, cascade,
+                bucket_size=sync.bucket_size)
+        else:
+            params_g, sync_state = dist.hier_param_sync(
+                sub, params_g, state.sync_state, compressor, lam,
+                sync.sync_period, bucket_size=sync.bucket_size)
         metrics = {"loss": jnp.mean(loss_g), "ce": jnp.mean(loss_g),
                    "grad_norm": jnp.mean(gnorm_g)}
         return TrainState(params_g, opt_state, sync_state, key), metrics

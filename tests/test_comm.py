@@ -203,6 +203,65 @@ def test_topology_presets_and_ring_model():
         topo.link("sideways")
 
 
+def test_streamed_time_never_beats_bandwidth_or_latency_floor():
+    """The pipelined model must respect two physical floors at EVERY tile
+    size: the bandwidth-only bound (bytes / link rate) and the per-message
+    latency of one full pass (a ring pays its 2*(g-1) step latencies per
+    tile; in-flight overlap can hide all but the first pass, never more).
+    The old model amortized the ring latency over the tile count, so a
+    codec-bound stream could undercut the serial path's latency floor."""
+    topo = get_topology("edge_fl")  # 100-pod ring, 50 ms per step: latency-bound
+    nbytes = 5e6
+    for scope, g, link in (("inter", topo.n_pods, topo.inter),
+                           ("intra", topo.devices_per_pod, topo.intra)):
+        lat_floor, bw_floor = topo.allreduce_parts_s(nbytes, scope)
+        for tile in (1 << 12, 1 << 16, 1 << 20, 1 << 24):
+            t = topo.allreduce_stream_time_s(nbytes, scope, tile)
+            assert t >= bw_floor
+            assert t >= lat_floor
+    # point-to-point: never beats bytes/bandwidth nor one hop latency
+    link = topo.inter
+    for tile in (1 << 12, 1 << 16, 1 << 20):
+        t = link.stream_time_s(nbytes, tile)
+        assert t >= nbytes / (link.gbps * 1e9)
+        assert t >= link.latency_us * 1e-6
+
+
+def test_streamed_allreduce_charges_full_ring_latency_when_codec_bound():
+    """Regression for the amortized-latency bug: with a slow codec and many
+    tiles, the streamed collective still pays the whole 2*(g-1)*latency ring
+    fill (the serial path's per-message charge), not latency/n_tiles."""
+    from repro.comm import CodecProfile
+
+    topo = get_topology("edge_fl")
+    slow_codec = CodecProfile(pack_gbps=0.01, unpack_gbps=0.01)
+    nbytes = 64e6  # 64 tiles at 1 MB
+    lat_floor, _ = topo.allreduce_parts_s(nbytes, "inter")  # 9.9 s of steps
+    t = topo.allreduce_stream_time_s(nbytes, "inter", 1 << 20, slow_codec)
+    assert lat_floor == pytest.approx(2 * 99 * 50e-3)
+    assert t >= lat_floor + slow_codec.pack_s(nbytes)  # fill + steady state
+    # and it still beats the serial path (pipelining helps, floor respected)
+    assert t < topo.allreduce_serial_time_s(nbytes, "inter", slow_codec)
+
+
+def test_measured_bits_extrapolation_crosscheck_4x_probe_cap():
+    """Satellite acceptance: beyond PROBE_CAP the index planes are sized
+    analytically from the true d.  Cross-check at n = 4 * PROBE_CAP against
+    a genuine full-size encode for each sparse family + a quantizer."""
+    from repro.comm import payload_bits_for
+    from repro.comm.accounting import PROBE_CAP
+
+    d = 4 * PROBE_CAP
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    for comp in (C.top_k(0.05), C.block_top_k(0.05), C.qsgd(8),
+                 C.qsgd_sharded(8, 256)):
+        est = payload_bits_for(comp, d, key=key)
+        true = encode(comp, key, x).nbits
+        # k rounds once per probe vs once at full size: sub-0.1% slack
+        assert abs(est / true - 1.0) < 1e-3, comp.name
+
+
 def test_round_cost_hier_faster_than_dense_on_slow_links():
     """Cohort-Squeeze's point: compressed + amortized inter-pod sync wins."""
     n = 100_000

@@ -85,6 +85,52 @@ def test_samplings_are_proper(prob):
     assert len(C) == 4
 
 
+def test_sigma_star_nice_mc_tracks_closed_form(prob, x_star):
+    """sigma*^2_NICE after the dead-code removal: the MC estimate still
+    tracks the closed form (n/tau-1)/(n-1)*sigma*^2(1) across tau, and the
+    full sampling (tau=n) has (near-)zero variance."""
+    for tau in (2, 5, 10):
+        mc, closed = sigma_star_nice(prob, x_star, tau=tau, n_mc=1024, seed=1)
+        assert closed > 0
+        assert abs(mc - closed) / closed < 0.3
+    mc_full, closed_full = sigma_star_nice(prob, x_star, tau=prob.n_clients)
+    assert closed_full == 0.0
+    assert mc_full < 1e-15  # grad f(x*) = 0: deterministic cohort
+
+
+def test_kmeans_blocks_reseeds_empty_clusters():
+    """Regression: coincident initial centers used to leave stale duplicate
+    centers forever (argmin ties send every point to the lower index), so
+    kmeans_blocks returned fewer blocks than requested and stratified
+    sampling silently drew from fewer strata."""
+    # 30 identical points at the origin + 3 distant singletons: any seed that
+    # picks duplicated origin rows as centers collapses without re-seeding
+    feats = np.zeros((33, 2))
+    feats[30] = (10.0, 0.0)
+    feats[31] = (0.0, 10.0)
+    feats[32] = (-10.0, -10.0)
+    for seed in range(6):
+        blocks = kmeans_blocks(feats, n_blocks=4, seed=seed, iters=20)
+        assert len(blocks) == 4, seed
+        allidx = np.concatenate(blocks)
+        assert len(allidx) == 33 and len(np.unique(allidx)) == 33
+    # the re-seeded centers should isolate the far points into their own
+    # clusters (farthest-point repair), keeping the partition sensible
+    blocks = kmeans_blocks(feats, n_blocks=4, seed=0, iters=20)
+    sizes = sorted(len(b) for b in blocks)
+    assert sizes == [1, 1, 1, 30]
+
+
+def test_kmeans_blocks_still_clusters_separated_data():
+    rng = np.random.default_rng(0)
+    feats = np.concatenate([rng.normal(loc=c, scale=0.05, size=(12, 3))
+                            for c in (-5.0, 0.0, 5.0)])
+    blocks = kmeans_blocks(feats, n_blocks=3, seed=1)
+    assert sorted(len(b) for b in blocks) == [12, 12, 12]
+    for b in blocks:
+        assert np.ptp(b // 12) == 0  # each block is one ground-truth cluster
+
+
 # ---------------------------------------------------------------------------
 # FedP3
 # ---------------------------------------------------------------------------
@@ -128,3 +174,41 @@ def test_splits_partition():
         allidx = np.concatenate(split)
         assert len(np.unique(allidx)) == len(allidx)  # disjoint
         assert len(allidx) <= len(y)
+
+
+def test_splits_non_contiguous_labels():
+    """Regression: classwise_split indexed its per-class counters with the
+    raw label VALUE — labels like {1, 3, 7} crashed (or, when they happened
+    to fit, credited the wrong class and mis-allocated pools).  Both splits
+    must treat labels as opaque values."""
+    rng = np.random.default_rng(0)
+    y = rng.choice([1, 3, 7], size=300)
+    for n_clients, split in ((6, classwise_split(y, 6, 2, seed=1)),
+                             (6, dirichlet_split(y, 6, 0.5, seed=1))):
+        assert len(split) == n_clients
+        allidx = np.concatenate([s for s in split if len(s)])
+        assert len(np.unique(allidx)) == len(allidx)          # disjoint
+        assert set(allidx).issubset(set(range(len(y))))
+    # classwise: every client actually holds samples of exactly the classes
+    # it was assigned (2 per client), and allocation is spread across clients
+    # sharing a class rather than the first client draining the pool
+    split = classwise_split(y, 6, 2, seed=1)
+    for s in split:
+        assert len(s) > 0
+        assert len(np.unique(y[s])) <= 2
+    # a label set far outside the class count must not crash either
+    y_wide = rng.choice([10, 200, 4000], size=90)
+    split = classwise_split(y_wide, 3, 2, seed=0)
+    assert sum(len(s) for s in split) > 0
+
+
+def test_classwise_split_shares_pools_with_nonzero_counts():
+    """With all clients assigned the same two (non-contiguous) classes, the
+    per-class sharer count is 4 for BOTH classes — the old label-indexed
+    counter would have read counts[5]/counts[9] out of bounds."""
+    y = np.repeat([5, 9], 120)
+    split = classwise_split(y, 4, classes_per_client=2, seed=3)
+    assert len(split) == 4
+    for s in split:
+        assert len(s) > 0
+        assert set(np.unique(y[s])) == {5, 9}  # both classes represented

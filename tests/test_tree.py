@@ -1,0 +1,284 @@
+"""Aggregation trees: TreeTopology, the multi-level anchor cascade, and
+per-level round-cost/ledger attribution (Cohort-Squeeze beyond two levels)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (Link, TreeLevel, TreeTopology, get_topology,
+                        get_tree_topology, register_tree_topology,
+                        round_cost, round_ledger)
+from repro.configs.base import LevelConfig, SyncConfig, TrainConfig
+from repro.core import compressors as C
+from repro.core import distributed as dist
+
+
+# ---------------------------------------------------------------------------
+# topology
+# ---------------------------------------------------------------------------
+def test_tree_presets_shapes():
+    tree = get_tree_topology("edge_fl_tree")
+    assert tree.depth == 3
+    assert tree.n_leaves == 100  # 5 phones x 5 cells x 4 regions
+    assert tree.n_leaves == get_topology("edge_fl").n_devices
+    assert tree.n_parents(0) == 20 and tree.n_parents(2) == 1
+    assert tree.level("uplink").fanout == 5
+    with pytest.raises(KeyError):
+        tree.level("nope")
+
+
+def test_tree_from_flat_is_depth2_special_case():
+    topo = get_topology("v5p_superpod")
+    tree = get_tree_topology("v5p_superpod")  # flat name -> depth-2 lift
+    assert tree.depth == 2
+    assert tree.levels[0].fanout == topo.devices_per_pod
+    assert tree.levels[1].fanout == topo.n_pods
+    assert tree.n_leaves == topo.n_devices
+    nb = 1 << 20
+    # level timing is the flat preset's ring model, bit for bit
+    assert tree.ring_time_s(0, nb) == topo.allreduce_time_s(nb, "intra")
+    assert tree.ring_time_s(1, nb) == topo.allreduce_time_s(nb, "inter")
+    assert tree.level_serial_time_s(1, nb) == \
+        topo.allreduce_serial_time_s(nb, "inter")
+    assert tree.level_stream_time_s(1, nb) == \
+        topo.allreduce_stream_time_s(nb, "inter")
+
+
+def test_register_tree_topology():
+    t = register_tree_topology(TreeTopology("tiny_tree_t1", (
+        TreeLevel("a", 2, Link(gbps=1.0, latency_us=1.0)),
+        TreeLevel("b", 3, Link(gbps=0.5, latency_us=10.0)),
+    )))
+    assert get_tree_topology("tiny_tree_t1") is t
+    assert t.n_leaves == 6
+
+
+# ---------------------------------------------------------------------------
+# cascade: depth-2 reproduces hier_param_sync bit-for-bit
+# ---------------------------------------------------------------------------
+def _rand_tree(key, G):
+    kw, kb = jax.random.split(key)
+    return {"w": jax.random.normal(kw, (G, 6)),
+            "b": jax.random.normal(kb, (G, 3))}
+
+
+def _zero_like(tree):
+    return jax.tree_util.tree_map(lambda l: jnp.zeros(l.shape[1:]), tree)
+
+
+@pytest.mark.parametrize("comp,period,bucket", [
+    (C.qsgd(8, 4), 1, None),          # stochastic, fused path
+    (C.top_k(0.4), 2, None),          # deterministic, fused path
+    (C.qsgd_sharded(8, 3), 2, None),  # flatten=False -> per-leaf path
+    (C.qsgd(8, 4), 4, 0),             # legacy per-leaf path
+], ids=["qsgd-fused", "topk-fused", "sharded-leaves", "qsgd-bucket0"])
+def test_cascade_depth2_reproduces_hier_bitwise(comp, period, bucket):
+    """Property (acceptance): a depth-2 [intra=identity/1, inter=C/p] cascade
+    over the device leaves produces, for one full inter period from fresh
+    anchors, exactly the outputs of today's hier_param_sync over the pod
+    means — bit for bit, on both the fused and the per-leaf paths."""
+    f, n_pods = 2, 3
+    G = f * n_pods
+    leaves = _rand_tree(jax.random.PRNGKey(0), G)
+    lam = (C.lambda_star(comp.eta, comp.omega)
+           if comp.eta is not None and comp.omega is not None else 1.0)
+    levels = (dist.CascadeLevel("intra", C.identity(), 1.0, 1, f),
+              dist.CascadeLevel("inter", comp, lam, period, n_pods))
+    tstate = dist.tree_sync_state_init(_zero_like(leaves), levels)
+
+    pod_means = jax.tree_util.tree_map(
+        lambda l: jnp.mean(l.reshape((n_pods, f) + l.shape[1:]), axis=1),
+        leaves)
+    hstate = dist.SyncState(h=(), h_bar=_zero_like(leaves),
+                            step=jnp.zeros((), jnp.int32))
+
+    p_tree, p_hier = leaves, pod_means
+    for t in range(period):
+        key = jax.random.PRNGKey(100 + t)
+        p_tree, tstate = dist.tree_param_sync(key, p_tree, tstate, levels,
+                                              bucket_size=bucket)
+        p_hier, hstate = dist.hier_param_sync(key, p_hier, hstate, comp, lam,
+                                              period, bucket_size=bucket)
+    for a, b in zip(jax.tree_util.tree_leaves(p_tree),
+                    jax.tree_util.tree_leaves(p_hier)):
+        np.testing.assert_array_equal(np.asarray(a),
+                                      np.asarray(jnp.repeat(b, f, axis=0)))
+    for a, b in zip(jax.tree_util.tree_leaves(tstate.anchors[-1]),
+                    jax.tree_util.tree_leaves(hstate.h_bar)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(tstate.step) == int(hstate.step) == period
+
+
+def test_cascade_intermediate_level_syncs_alone():
+    """Between root syncs the leaf level still aggregates: leaves adopt their
+    pod anchor (the pod mean) while the root anchor stays untouched."""
+    f, n_pods = 2, 2
+    leaves = _rand_tree(jax.random.PRNGKey(3), f * n_pods)
+    levels = (dist.CascadeLevel("intra", C.identity(), 1.0, 1, f),
+              dist.CascadeLevel("inter", C.identity(), 1.0, 4, n_pods))
+    tstate = dist.tree_sync_state_init(_zero_like(leaves), levels)
+    new_p, ts = dist.tree_param_sync(jax.random.PRNGKey(4), leaves, tstate,
+                                     levels)
+    pod_means = jax.tree_util.tree_map(
+        lambda l: jnp.mean(l.reshape((n_pods, f) + l.shape[1:]), axis=1),
+        leaves)
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               np.asarray(jnp.repeat(pod_means["w"], f, axis=0)),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ts.anchors[0]["w"]),
+                                  np.asarray(pod_means["w"]))
+    # root anchor untouched on an intermediate-only step
+    np.testing.assert_array_equal(np.asarray(ts.anchors[1]["w"]),
+                                  np.zeros((6,), np.float32))
+
+
+def test_cascade_full_sync_adopts_root_everywhere():
+    f, n_pods = 2, 2
+    leaves = _rand_tree(jax.random.PRNGKey(5), f * n_pods)
+    levels = (dist.CascadeLevel("intra", C.identity(), 1.0, 1, f),
+              dist.CascadeLevel("inter", C.identity(), 1.0, 1, n_pods))
+    tstate = dist.tree_sync_state_init(_zero_like(leaves), levels)
+    new_p, ts = dist.tree_param_sync(jax.random.PRNGKey(6), leaves, tstate,
+                                     levels)
+    mean = jax.tree_util.tree_map(lambda l: jnp.mean(l, axis=0), leaves)
+    # everyone — leaves, pod anchors, root — holds the global mean
+    np.testing.assert_allclose(np.asarray(new_p["w"][0]),
+                               np.asarray(mean["w"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(ts.anchors[0]["w"][1]),
+                               np.asarray(mean["w"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(ts.anchors[1]["w"]),
+                               np.asarray(mean["w"]), rtol=1e-6)
+
+
+def test_cascade_rejects_non_nested_periods_and_bad_fanout():
+    leaves = _rand_tree(jax.random.PRNGKey(7), 4)
+    levels = (dist.CascadeLevel("a", C.identity(), 1.0, 2, 2),
+              dist.CascadeLevel("b", C.identity(), 1.0, 3, 2))
+    st = dist.tree_sync_state_init(_zero_like(leaves), levels)
+    with pytest.raises(ValueError, match="nested"):
+        dist.tree_param_sync(jax.random.PRNGKey(0), leaves, st, levels)
+    ok = (dist.CascadeLevel("a", C.identity(), 1.0, 2, 2),
+          dist.CascadeLevel("b", C.identity(), 1.0, 4, 3))  # 6 leaves != 4
+    st = dist.tree_sync_state_init(_zero_like(leaves), ok)
+    with pytest.raises(ValueError, match="fanout"):
+        dist.tree_param_sync(jax.random.PRNGKey(0), leaves, st, ok)
+
+
+def test_build_cascade_from_config():
+    sc = SyncConfig(mode="hier", topology="edge_fl_tree", levels=(
+        LevelConfig("uplink", 2, "top_k", 0.1),
+        LevelConfig("metro", 4, "qsgd", quant_bits=8),
+        LevelConfig("wan", 8, "top_k", 0.02)))
+    cascade = dist.build_cascade(sc)
+    assert [lev.fanout for lev in cascade] == [5, 5, 4]
+    assert [lev.period for lev in cascade] == [2, 4, 8]
+    assert cascade[0].compressor.name.startswith("top_k")
+    bad = SyncConfig(mode="hier", topology="edge_fl_tree", levels=(
+        LevelConfig("uplink", 2), LevelConfig("metro", 3),
+        LevelConfig("wan", 6)))
+    with pytest.raises(ValueError, match="nested"):
+        dist.build_cascade(bad)
+    mismatched = SyncConfig(mode="hier", topology="edge_fl_tree",
+                            levels=(LevelConfig("uplink", 1),))
+    with pytest.raises(ValueError, match="levels"):
+        dist.build_cascade(mismatched)
+
+
+# ---------------------------------------------------------------------------
+# accounting: per-level attribution
+# ---------------------------------------------------------------------------
+def _tree_sync(period=4):
+    return SyncConfig(mode="hier", topology="edge_fl_tree", levels=(
+        LevelConfig("uplink", period, "top_k", 0.05),
+        LevelConfig("metro", 2 * period, "qsgd", quant_bits=8),
+        LevelConfig("wan", 4 * period, "top_k", 0.01)))
+
+
+def test_round_cost_depth2_matches_flat_hier_bitwise():
+    """Acceptance: the depth-2 levels config reproduces flat hier exactly."""
+    n = 100_000
+    for preset in ("v5p_superpod", "geo_wan", "edge_fl"):
+        flat = round_cost(SyncConfig(mode="hier", compressor="qsgd",
+                                     quant_bits=8, sync_period=8,
+                                     topology=preset), n)
+        d2 = round_cost(SyncConfig(mode="hier", topology=preset, levels=(
+            LevelConfig("intra", 1, "identity"),
+            LevelConfig("inter", 8, "qsgd", quant_bits=8))), n)
+        for f in ("intra_bytes", "inter_bytes", "time_s", "serial_time_s",
+                  "encoded_bits", "analytic_bits", "tile_bytes"):
+            assert getattr(d2, f) == getattr(flat, f), (preset, f)
+        assert len(flat.levels) == len(d2.levels) == 2
+
+
+def test_round_cost_levels_sum_to_total_bytes():
+    cost = round_cost(_tree_sync(), 50_000)
+    assert len(cost.levels) == 3
+    total = sum(lv.bytes_per_round for lv in cost.levels)
+    assert total == pytest.approx(cost.total_bytes)
+    assert cost.intra_bytes == cost.levels[0].bytes_per_round
+    assert cost.inter_bytes == pytest.approx(
+        sum(lv.bytes_per_round for lv in cost.levels[1:]))
+    # times add across levels too
+    assert cost.serial_time_s == pytest.approx(
+        sum(lv.serial_time_s for lv in cost.levels))
+    assert cost.time_s <= cost.serial_time_s  # streaming never hurts
+
+
+def test_round_ledger_tags_levels_and_sums():
+    """Acceptance: per-level ledger bytes sum to RoundCost.total_bytes."""
+    sync = _tree_sync(period=2)
+    n = 30_000
+    cost = round_cost(sync, n)
+    led = round_ledger(sync, n)
+    assert led.n_rounds() == 8  # one full root period
+    by_tag = led.bytes_by_tag()
+    assert set(by_tag) == {"uplink", "metro", "wan"}
+    assert sum(by_tag.values()) == led.total_bytes
+    # amortized per round, the tagged records reproduce the RoundCost total
+    assert led.total_bytes / led.n_rounds() == pytest.approx(
+        cost.total_bytes, rel=1e-6)
+    # each level's amortized share matches its LevelCost
+    for lv in cost.levels:
+        assert by_tag[lv.name] / led.n_rounds() == pytest.approx(
+            lv.bytes_per_round, rel=1e-6)
+
+
+def test_edge_fl_tree_beats_flat_hier():
+    """Acceptance: >=3-level tree with per-level compression strictly reduces
+    slow-link bytes AND simulated round time vs flat hier at equal periods."""
+    n = 200_000
+    flat = round_cost(SyncConfig(mode="hier", compressor="qsgd", quant_bits=8,
+                                 sync_period=8, topology="edge_fl"), n)
+    tree = round_cost(SyncConfig(mode="hier", topology="edge_fl_tree", levels=(
+        LevelConfig("uplink", 8, "top_k", 0.05),
+        LevelConfig("metro", 16, "qsgd", quant_bits=8),
+        LevelConfig("wan", 32, "top_k", 0.01))), n)
+    slow_gbps = get_topology("edge_fl").inter.gbps
+    slow_tree = sum(lv.bytes_per_round for lv in tree.levels
+                    if lv.link_gbps <= slow_gbps)
+    assert slow_tree < flat.inter_bytes
+    assert tree.time_s < flat.time_s
+
+
+# ---------------------------------------------------------------------------
+# training-step wiring
+# ---------------------------------------------------------------------------
+def test_tree_training_smoke():
+    from repro.configs import get_config
+    from repro.data.synthetic import SyntheticLMDataset, lm_batch_iterator
+    from repro.training.loop import train
+
+    register_tree_topology(TreeTopology("tiny_tree_2x2", (
+        TreeLevel("edge", 2, Link(gbps=1.0, latency_us=10.0)),
+        TreeLevel("wan", 2, Link(gbps=0.1, latency_us=1000.0)),
+    )))
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    sync = SyncConfig(mode="hier", topology="tiny_tree_2x2", levels=(
+        LevelConfig("edge", 1, "identity"),
+        LevelConfig("wan", 2, "qsgd", quant_bits=8)))
+    tc = TrainConfig(model=cfg, seq_len=32, global_batch=4, lr=3e-3,
+                     warmup_steps=2, total_steps=6, sync=sync)
+    ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, length=2000, seed=0)
+    _, hist = train(cfg, tc, lm_batch_iterator(ds, 4, 32, seed=1),
+                    steps=6, log_every=1000)
+    assert np.isfinite([h["loss"] for h in hist]).all()
