@@ -21,6 +21,12 @@ Rows:
 
 Smoke mode (env BENCH_SMOKE=1 or --smoke): tiny payloads, 1 repeat — used by
 CI so codec perf regressions fail loudly instead of silently.
+
+Traced mode (``--traced``): :func:`traced_round` runs one full root period of
+a hier schedule host-side with the real codecs under the repro.obs flight
+recorder and writes ``TRACE_round.jsonl`` + ``METRICS_round.json``; feeding
+them to ``python -m repro.obs.report`` yields the measured-vs-modeled phase
+table whose per-level measured bytes match the ``CommLedger`` exactly.
 """
 from __future__ import annotations
 
@@ -59,7 +65,8 @@ def _codec_rows(d: int, repeats: int):
     ]
     rows = []
     for name, comp in cases:
-        us = timed(lambda: decode(encode(comp, key, x)), repeats=repeats)
+        us = timed(lambda: decode(encode(comp, key, x)), repeats=repeats,
+                   name=f"comm_codec/{name}")
         p = encode(comp, key, x)
         exact = bool(jnp.all(comp(key, x) == decode(p)))
         led = CommLedger()
@@ -80,7 +87,7 @@ def _stream_codec_rows(d: int, repeats: int, tiles):
     rows = []
     for tile in tiles:
         us = timed(lambda: decode_stream(encode_stream(comp, key, x, tile=tile)),
-                   repeats=repeats)
+                   repeats=repeats, name=f"comm_stream/codec_tile{tile}")
         sp = split_payload(p, tile)
         led = CommLedger()
         led.record_stream(0, "probe", sp)
@@ -121,7 +128,7 @@ def _kernel_rows(d: int, repeats: int):
     rows = []
     mask = (jax.random.uniform(jax.random.PRNGKey(2), (d,)) < 0.05)
     us = timed(lambda: jax.block_until_ready(ops.pack_bits(mask)),
-               repeats=repeats)
+               repeats=repeats, name="comm_kernel/pack_bits")
     words = ops.pack_bits(mask)
     ok = bool(jnp.all(ops.unpack_bits(words, d) == mask.astype(jnp.uint32)))
     rows.append(("comm_kernel/pack_bits", us,
@@ -130,7 +137,7 @@ def _kernel_rows(d: int, repeats: int):
     x = jax.random.normal(jax.random.PRNGKey(3), (d,)) * 5
     key = jax.random.PRNGKey(4)
     us = timed(lambda: jax.block_until_ready(ops.quantize_pack(x, key)[0]),
-               repeats=repeats)
+               repeats=repeats, name="comm_kernel/quantize_pack")
     q, scales = ops.quantize_pack(x, key)
     dq = ops.unpack_dequantize(q, scales, d)
     carrier = ops.quantize_dequantize(x, key)
@@ -139,7 +146,7 @@ def _kernel_rows(d: int, repeats: int):
                  f"plane_bytes={q.size + 4 * scales.size};matches_carrier={ok}"))
 
     us = timed(lambda: jax.block_until_ready(ops.stream_quantize_pack(x, key)[0]),
-               repeats=repeats)
+               repeats=repeats, name="comm_kernel/stream_quantize_pack")
     qs, ss = ops.stream_quantize_pack(x, key)
     ok = bool(jnp.all(qs == q)) and bool(jnp.all(ss == scales))
     rows.append(("comm_kernel/stream_quantize_pack", us,
@@ -158,7 +165,8 @@ def _round_rows(repeats: int):
         ("hier_qsgd8_p8", SyncConfig(mode="hier", compressor="qsgd",
                                      quant_bits=8, sync_period=8)),
     ]:
-        us = timed(lambda: round_cost(sync, n_params), repeats=repeats)
+        us = timed(lambda: round_cost(sync, n_params), repeats=repeats,
+                   name=f"comm_round/{label}")
         cost = round_cost(sync, n_params)
         wan = round_cost(sync, n_params, topology=get_topology("geo_wan"))
         ratio = cost.encoded_bits / cost.analytic_bits if cost.analytic_bits else 0
@@ -167,6 +175,94 @@ def _round_rows(repeats: int):
                      f"t_v5p={cost.time_s*1e3:.2f}ms;t_wan={wan.time_s*1e3:.1f}ms;"
                      f"t_wan_serial={wan.serial_time_s*1e3:.1f}ms"))
     return rows
+
+
+def traced_round(out_dir: str = ".", n_params: int = 1 << 16, sync=None,
+                 label: str = "bench_comm_round"):
+    """One full root period of a hier schedule, executed host-side with the
+    real codecs under tracing.
+
+    Every sync step encodes the same probe payload ``round_ledger`` sizes
+    its records from (``x = normal(fold_in(key, 1), (n_params,))`` encoded
+    under ``key = PRNGKey(0)``), so the encode-span ``nbytes`` per level sum
+    to the ledger's ``bytes_by_tag`` exactly — the invariant
+    ``python -m repro.obs.report`` audits.  Writes the trace JSONL and a
+    metrics JSON carrying the ledger; returns ``(trace_path, metrics_path)``.
+    """
+    import numpy as np
+
+    from repro.comm import round_ledger
+    from repro.comm.accounting import PROBE_CAP, _hier_levels
+    from repro.core.distributed import make_sync_compressor
+    from repro.obs import registry, trace as obs_trace
+
+    sync = sync or SyncConfig(mode="hier", compressor="qsgd", quant_bits=8,
+                              sync_period=4)
+    assert sync.mode == "hier", sync.mode
+    assert n_params <= PROBE_CAP, "exact ledger match needs n_params <= probe"
+    lcfgs = _hier_levels(sync)
+    n_rounds = max(1, lcfgs[-1].period)  # one full root period
+
+    was_enabled = obs_trace.enabled()
+    obs_trace.enable()
+    obs_trace.get_tracer().reset()
+    registry.reset()
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (n_params,))
+    comps = {lc.name: make_sync_compressor(lc.compressor, lc.compress_ratio,
+                                           lc.quant_bits)
+             for lc in lcfgs}
+
+    for t in range(n_rounds):
+        with obs_trace.span("round/step", round=t):
+            for lc in lcfgs:
+                period = max(1, lc.period)
+                if (t % period) != (period - 1):
+                    continue  # this level does not sync at round t
+                with obs_trace.ambient(level=lc.name):
+                    with obs_trace.span("sync/pack", level=lc.name):
+                        host = np.asarray(x)  # host staging of the payload
+                    p = encode(comps[lc.name], key, x)  # codec/encode span
+                    with obs_trace.span("comm/allreduce", level=lc.name,
+                                        nbytes=p.nbytes):
+                        # the wire hop: planes cross the level's link
+                        wire = {k: v.copy() for k, v in p.planes.items()}
+                    y = decode(p)                       # codec/decode span
+                    with obs_trace.span("sync/adopt", level=lc.name):
+                        host = host + np.asarray(y)     # model adoption
+    del wire, host
+
+    sync_meta = {"mode": sync.mode, "compressor": sync.compressor,
+                 "compress_ratio": sync.compress_ratio,
+                 "quant_bits": sync.quant_bits,
+                 "sync_period": sync.sync_period,
+                 "topology": sync.topology}
+    if sync.levels:
+        sync_meta["levels"] = [
+            {"name": lc.name, "period": lc.period, "compressor": lc.compressor,
+             "compress_ratio": lc.compress_ratio, "quant_bits": lc.quant_bits}
+            for lc in sync.levels]
+    obs_trace.set_meta(label=label, n_params=n_params, n_rounds=n_rounds,
+                       sync=sync_meta)
+
+    # export the trace BEFORE the accounting calls: round_ledger/round_cost
+    # size their probes through codecs.encode, which would otherwise leak
+    # untagged encode spans into the audited trace
+    trace_path = obs_trace.export_jsonl(
+        os.path.join(out_dir, "TRACE_round.jsonl"))
+    if not was_enabled:
+        obs_trace.disable()
+
+    led = round_ledger(sync, n_params, n_rounds=n_rounds)
+    registry.observe_round_cost(0, round_cost(sync, n_params))
+    registry.ingest_ledger(led)
+    metrics_path = registry.export_json(
+        os.path.join(out_dir, "METRICS_round.json"),
+        extra={"ledger_bytes_by_tag": {k: float(v)
+                                       for k, v in led.bytes_by_tag().items()},
+               "n_params": n_params, "n_rounds": n_rounds})
+    return trace_path, metrics_path
 
 
 def run(smoke: bool = False):
@@ -182,7 +278,16 @@ def run(smoke: bool = False):
 
 
 def main():
-    emit(run(smoke="--smoke" in sys.argv[1:]))
+    argv = sys.argv[1:]
+    if "--traced" in argv:
+        out_dir = os.environ.get("BENCH_TRACE_DIR", ".")
+        trace_path, metrics_path = traced_round(out_dir=out_dir)
+        print(f"# trace -> {trace_path}", file=sys.stderr)
+        print(f"# metrics -> {metrics_path}", file=sys.stderr)
+        print(f"# report: python -m repro.obs.report {trace_path} "
+              f"--metrics {metrics_path}", file=sys.stderr)
+        return
+    emit(run(smoke="--smoke" in argv))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,110 @@
+"""Diff freshly-measured BENCH_*.json against the committed baselines.
+
+The committed files under ``benchmarks/baselines/`` pin the comm / hier
+benchmark trajectory (row names, payload bytes, wall-time order of
+magnitude).  This check fails when:
+
+* a baseline row is missing from the current run (a bench silently dropped);
+* a row's ``bytes`` drifts beyond ``--bytes-tol`` (default 2% — encoded
+  payload sizes are deterministic, so any drift is a codec change and must
+  be re-baselined deliberately);
+* a row's wall-time exceeds ``--time-ratio`` x the baseline (default 25x —
+  generous, because CI machines vary; it catches accidental O(n) -> O(n^2)
+  cliffs, not noise).
+
+Usage (CI runs the no-argument form after ``BENCH_SMOKE=1`` benches)::
+
+    python -m benchmarks.check_regression                # cwd vs baselines/
+    python -m benchmarks.check_regression CUR.json BASE.json [--bytes-tol ..]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Tuple
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baselines")
+DEFAULT_PAIRS = (("BENCH_comm.json", "BENCH_comm.json"),
+                 ("BENCH_hier.json", "BENCH_hier.json"))
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: r for r in doc["rows"]}
+
+
+def diff(current: dict, baseline: dict, bytes_tol: float,
+         time_ratio: float) -> Tuple[List[str], List[str]]:
+    """Returns (failures, notes)."""
+    failures, notes = [], []
+    for name, base in sorted(baseline.items()):
+        cur = current.get(name)
+        if cur is None:
+            failures.append(f"missing row: {name}")
+            continue
+        b_bytes, c_bytes = base.get("bytes"), cur.get("bytes")
+        if b_bytes and c_bytes is not None:
+            drift = abs(c_bytes - b_bytes) / b_bytes
+            if drift > bytes_tol:
+                failures.append(
+                    f"bytes drift {name}: {b_bytes} -> {c_bytes} "
+                    f"({drift * 100:.1f}% > {bytes_tol * 100:.1f}%)")
+        b_us, c_us = base.get("us", 0.0), cur.get("us", 0.0)
+        if b_us > 0 and c_us > time_ratio * b_us:
+            failures.append(
+                f"time cliff {name}: {b_us:.1f}us -> {c_us:.1f}us "
+                f"(> {time_ratio:.0f}x baseline)")
+    for name in sorted(set(current) - set(baseline)):
+        notes.append(f"new row (not in baseline): {name}")
+    return failures, notes
+
+
+def check_pair(cur_path: str, base_path: str, bytes_tol: float,
+               time_ratio: float) -> int:
+    label = os.path.basename(cur_path)
+    if not os.path.exists(cur_path):
+        print(f"FAIL {label}: current file {cur_path} not found")
+        return 1
+    failures, notes = diff(load_rows(cur_path), load_rows(base_path),
+                           bytes_tol, time_ratio)
+    for n in notes:
+        print(f"  note {label}: {n}")
+    for f in failures:
+        print(f"  FAIL {label}: {f}")
+    n_rows = len(load_rows(base_path))
+    status = "FAIL" if failures else "ok"
+    print(f"{status} {label}: {n_rows} baseline rows, "
+          f"{len(failures)} failure(s)")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.check_regression", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("current", nargs="?", default=None)
+    ap.add_argument("baseline", nargs="?", default=None)
+    ap.add_argument("--bytes-tol", type=float, default=0.02,
+                    help="relative bytes tolerance (default 0.02)")
+    ap.add_argument("--time-ratio", type=float, default=25.0,
+                    help="max wall-time ratio vs baseline (default 25x)")
+    args = ap.parse_args(argv)
+
+    if args.current:
+        base = args.baseline or os.path.join(
+            BASELINE_DIR, os.path.basename(args.current))
+        return check_pair(args.current, base, args.bytes_tol, args.time_ratio)
+
+    rc = 0
+    for cur, base in DEFAULT_PAIRS:
+        rc |= check_pair(cur, os.path.join(BASELINE_DIR, base),
+                         args.bytes_tol, args.time_ratio)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,24 +1,64 @@
-"""Shared benchmark utilities: timing + CSV row emission."""
+"""Shared benchmark utilities: timing, CSV row emission, trace capture.
+
+When tracing is on (``REPRO_TRACE=1`` or ``repro.obs.trace.enable()``),
+``timed`` wraps every measured call in a ``bench/<name>`` span and
+``module_trace`` exports each bench module's flight-recorder contents to
+``TRACE_<label>.jsonl`` (dir from ``BENCH_TRACE_DIR``, default cwd) — so a
+traced benchmark run leaves one trace file per module next to the CSV rows.
+"""
 from __future__ import annotations
 
+import os
 import time
-from typing import Callable, List, Tuple
+from contextlib import contextmanager
+from typing import Callable, List, Optional, Tuple
+
+from repro.obs import trace as obs_trace
 
 Row = Tuple[str, float, str]
 
 
-def timed(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+def trace_dir() -> str:
+    return os.environ.get("BENCH_TRACE_DIR", ".")
+
+
+@contextmanager
+def module_trace(label: str, **meta):
+    """Reset the flight recorder around one bench module and export its
+    spans to ``TRACE_<label>.jsonl`` on exit.  No-op when tracing is off."""
+    if not obs_trace.enabled():
+        yield None
+        return
+    tracer = obs_trace.get_tracer()
+    tracer.reset()
+    obs_trace.set_meta(label=label, **meta)
+    try:
+        yield tracer
+    finally:
+        path = os.path.join(trace_dir(), f"TRACE_{label}.jsonl")
+        obs_trace.export_jsonl(path)
+
+
+def timed(fn: Callable, repeats: int = 3, warmup: int = 1,
+          name: Optional[str] = None) -> float:
     """Median wall-time per call in microseconds.
 
     ``warmup`` calls run first and are discarded so JIT/trace cost doesn't
-    pollute the median (codec rows used to time a single cold call).
+    pollute the median (codec rows used to time a single cold call).  With
+    tracing on and a ``name``, each measured call records a ``bench/<name>``
+    span so the trace file carries one span per (row, repeat).
     """
     for _ in range(max(0, warmup)):
         fn()
+    tracing = name is not None and obs_trace.enabled()
     ts = []
-    for _ in range(repeats):
+    for rep in range(repeats):
         t0 = time.perf_counter()
-        fn()
+        if tracing:
+            with obs_trace.span(f"bench/{name}", repeat=rep):
+                fn()
+        else:
+            fn()
         ts.append((time.perf_counter() - t0) * 1e6)
     ts.sort()
     return ts[len(ts) // 2]

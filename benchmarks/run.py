@@ -37,7 +37,8 @@ def main() -> None:
     from benchmarks import bench_comm, bench_efbv, bench_fedp3, bench_hier
     from benchmarks import bench_kernels, bench_scafflix, bench_scafflix_nn
     from benchmarks import bench_sppm, bench_symwanda
-    from benchmarks.common import emit
+    from benchmarks.common import emit, module_trace, trace_dir
+    from repro.obs import trace as obs_trace
 
     modules = [
         ("comm(codecs/ledger/topology)", bench_comm),
@@ -57,9 +58,17 @@ def main() -> None:
     print("name,us_per_call,derived")
     for label, mod in modules:
         t0 = time.time()
+        short = mod.__name__.rsplit(".", 1)[-1].removeprefix("bench_")
         try:
-            rows = mod.run()
+            # with REPRO_TRACE=1 each module's spans land in its own
+            # TRACE_<module>.jsonl next to the CSV rows
+            with module_trace(short, module=mod.__name__):
+                rows = mod.run()
             emit(rows)
+            if obs_trace.enabled():
+                print(f"# {label} trace -> "
+                      f"{os.path.join(trace_dir(), f'TRACE_{short}.jsonl')}",
+                      file=sys.stderr)
             if id(mod) in json_sinks:
                 env, default = json_sinks[id(mod)]
                 path = os.environ.get(env, default)

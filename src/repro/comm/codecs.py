@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compressors import Compressor, WireSpec
+from repro.obs import trace as obs_trace
 
 
 @dataclass
@@ -117,6 +118,15 @@ def encode(c: Compressor, key, x, scheme: Optional[str] = None) -> Payload:
     The dense carrier ``y = c(key, x)`` is what the algorithm consumes; the
     payload is an exact packed representation of it: decode(encode(...)) == y.
     """
+    if obs_trace.enabled():  # flight-recorder: host-side pack is a real phase
+        with obs_trace.span("codec/encode") as sp:
+            p = _encode(c, key, x, scheme)
+            sp.tag(scheme=p.scheme, nbytes=p.nbytes)
+        return p
+    return _encode(c, key, x, scheme)
+
+
+def _encode(c: Compressor, key, x, scheme: Optional[str] = None) -> Payload:
     spec = c.wire or WireSpec("dense")
     scheme = scheme or spec.scheme
     if scheme == "quant" and spec.axis == "kernel":
@@ -139,6 +149,14 @@ def encode(c: Compressor, key, x, scheme: Optional[str] = None) -> Payload:
 
 def decode(p: Payload):
     """Reconstruct the dense compressed carrier from the wire planes."""
+    if obs_trace.enabled():
+        with obs_trace.span("codec/decode", scheme=p.scheme,
+                            nbytes=p.nbytes):
+            return _decode(p)
+    return _decode(p)
+
+
+def _decode(p: Payload):
     if p.scheme == "dense":
         out = p.planes["values"].astype(p.meta.get("plane_dtype", p.dtype))
         return jnp.asarray(out.reshape(p.shape)).astype(p.dtype)
@@ -496,12 +514,17 @@ def split_payload(p: Payload, tile: int = DEFAULT_TILE) -> StreamPayload:
     g = _stream_granule(p)
     tile = max(g, (int(tile) // g) * g)
     n = max(1, -(-d // tile))
+    tracing = obs_trace.enabled()
     offs = _plane_offsets(p, tile, n)
     chunks = []
     for t in range(n):
-        planes = {k: v[int(offs[k][t]): int(offs[k][t + 1])]
-                  for k, v in p.planes.items()}
-        chunks.append(Chunk(t, min(t * tile, d), min((t + 1) * tile, d), planes))
+        with (obs_trace.span("codec/encode_chunk", index=t) if tracing
+              else obs_trace.NULL_SPAN) as csp:
+            planes = {k: v[int(offs[k][t]): int(offs[k][t + 1])]
+                      for k, v in p.planes.items()}
+            ch = Chunk(t, min(t * tile, d), min((t + 1) * tile, d), planes)
+            csp.tag(nbytes=ch.nbytes)
+        chunks.append(ch)
     sp = StreamPayload(p.scheme, p.shape, p.dtype, tile, chunks, dict(p.meta))
     assert sp.nbytes == p.nbytes, (sp.nbytes, p.nbytes, p.scheme)
     return sp

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from repro.configs.base import SyncConfig
 from repro.core import compressors as comp_lib
 from repro.core.compressors import Compressor
+from repro.obs.trace import annotate
 from repro.utils.tree import tree_map
 
 
@@ -178,20 +179,27 @@ def efbv_sync(key, grads_g, state: SyncState, c: Compressor, lam: float,
     if bucket_size is None:
         bucket_size = bk.DEFAULT_BUCKET_SIZE
     if not bucket_size or not c.flatten:
-        return _efbv_sync_leaves(key, grads_g, state, c, lam, nu)
-    g_b, layout = bk.bucketize_groups(grads_g, bucket_size)      # (G, nb, B)
-    h_b, _ = bk.bucketize_groups(state.h, bucket_size)
-    hb_b, _ = bk.bucketize(state.h_bar, bucket_size)             # (nb, B)
-    keys = jax.random.split(key, g_b.shape[0])
-    d_i = _fused_compress(c, keys, g_b - h_b, layout.d)
-    d = jnp.mean(d_i, axis=0)
-    f32 = jnp.float32
-    return (
-        bk.debucketize(hb_b + nu * d, layout, dtype=f32),
-        SyncState(h=bk.debucketize_groups(h_b + lam * d_i, layout, dtype=f32),
-                  h_bar=bk.debucketize(hb_b + lam * d, layout, dtype=f32),
-                  step=state.step + 1),
-    )
+        with annotate("sync/efbv"):
+            return _efbv_sync_leaves(key, grads_g, state, c, lam, nu)
+    with annotate("sync/efbv"):
+        with annotate("sync/bucketize"):
+            g_b, layout = bk.bucketize_groups(grads_g, bucket_size)  # (G, nb, B)
+            h_b, _ = bk.bucketize_groups(state.h, bucket_size)
+            hb_b, _ = bk.bucketize(state.h_bar, bucket_size)         # (nb, B)
+        keys = jax.random.split(key, g_b.shape[0])
+        with annotate("sync/compress"):
+            d_i = _fused_compress(c, keys, g_b - h_b, layout.d)
+        d = jnp.mean(d_i, axis=0)
+        f32 = jnp.float32
+        with annotate("sync/debucketize"):
+            return (
+                bk.debucketize(hb_b + nu * d, layout, dtype=f32),
+                SyncState(h=bk.debucketize_groups(h_b + lam * d_i, layout,
+                                                  dtype=f32),
+                          h_bar=bk.debucketize(hb_b + lam * d, layout,
+                                               dtype=f32),
+                          step=state.step + 1),
+            )
 
 
 def _fused_compress(c: Compressor, keys, delta_b, d: int):
@@ -356,18 +364,19 @@ def _tree_sync_fused(key, params_g, state, levels, bucket_size, n_sync):
 
     def level_sync(l, child_b, parent_b):
         lev = levels[l]
-        keys = jax.random.split(_level_key(key, l, L), child_b.shape[0])
-        if parent_b.ndim == 2:                      # root: unstacked anchor
-            d_i = _fused_compress(lev.compressor, keys, child_b - parent_b,
+        with annotate(f"sync/level/{lev.name}"):
+            keys = jax.random.split(_level_key(key, l, L), child_b.shape[0])
+            if parent_b.ndim == 2:                  # root: unstacked anchor
+                d_i = _fused_compress(lev.compressor, keys,
+                                      child_b - parent_b, layout.d)
+                return parent_b + lev.lam * jnp.mean(d_i, axis=0)
+            n_par = parent_b.shape[0]
+            f = child_b.shape[0] // n_par
+            d_i = _fused_compress(lev.compressor, keys,
+                                  child_b - jnp.repeat(parent_b, f, axis=0),
                                   layout.d)
-            return parent_b + lev.lam * jnp.mean(d_i, axis=0)
-        n_par = parent_b.shape[0]
-        f = child_b.shape[0] // n_par
-        d_i = _fused_compress(lev.compressor, keys,
-                              child_b - jnp.repeat(parent_b, f, axis=0),
-                              layout.d)
-        return parent_b + lev.lam * jnp.mean(
-            d_i.reshape((n_par, f) + d_i.shape[1:]), axis=1)
+            return parent_b + lev.lam * jnp.mean(
+                d_i.reshape((n_par, f) + d_i.shape[1:]), axis=1)
 
     def make_branch(j):
         def branch(args):
@@ -407,18 +416,20 @@ def _tree_sync_leaves(key, params_g, state, levels, n_sync):
 
     def level_sync(l, li, child, parent):
         lev = levels[l]
-        keys = jax.random.split(
-            jax.random.fold_in(_level_key(key, l, L), li), child.shape[0])
-        delta = child.astype(jnp.float32)
-        if parent.ndim == child.ndim:               # stacked (non-root) anchor
-            n_par = parent.shape[0]
-            f = child.shape[0] // n_par
-            delta = delta - jnp.repeat(parent, f, axis=0)
-            d_i = jax.vmap(lambda k, v: lev.compressor(k, v))(keys, delta)
-            return parent + lev.lam * jnp.mean(
-                d_i.reshape((n_par, f) + d_i.shape[1:]), axis=1)
-        d_i = jax.vmap(lambda k, v: lev.compressor(k, v))(keys, delta - parent)
-        return parent + lev.lam * jnp.mean(d_i, axis=0)
+        with annotate(f"sync/level/{lev.name}"):
+            keys = jax.random.split(
+                jax.random.fold_in(_level_key(key, l, L), li), child.shape[0])
+            delta = child.astype(jnp.float32)
+            if parent.ndim == child.ndim:           # stacked (non-root) anchor
+                n_par = parent.shape[0]
+                f = child.shape[0] // n_par
+                delta = delta - jnp.repeat(parent, f, axis=0)
+                d_i = jax.vmap(lambda k, v: lev.compressor(k, v))(keys, delta)
+                return parent + lev.lam * jnp.mean(
+                    d_i.reshape((n_par, f) + d_i.shape[1:]), axis=1)
+            d_i = jax.vmap(lambda k, v: lev.compressor(k, v))(keys,
+                                                              delta - parent)
+            return parent + lev.lam * jnp.mean(d_i, axis=0)
 
     def make_branch(j):
         def branch(args):

@@ -30,6 +30,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.quant8 import QBLOCK, TILE_ROWS
+from repro.obs.trace import annotate
 
 N_SLOTS = 2  # double buffering
 
@@ -51,8 +52,12 @@ def _stream_kernel(x_hbm, noise_hbm, q_hbm, scale_hbm, *, n_tiles: int,
                     pltpu.make_async_copy(s_buf.at[slot], scale_hbm.at[rows],
                                           out_sems.at[slot, 1]))
 
-        for dma in in_dmas(0, 0):
-            dma.start()
+        # fill: tile 0's inbound copies start before the loop spins up (the
+        # annotate scopes are trace-time jax.named_scopes — they label the
+        # ring phases in jaxpr/XLA profiles, zero runtime cost)
+        with annotate("stream/ring_fill"):
+            for dma in in_dmas(0, 0):
+                dma.start()
 
         def tile_step(k, _):
             slot = jax.lax.rem(k, N_SLOTS)
@@ -82,12 +87,14 @@ def _stream_kernel(x_hbm, noise_hbm, q_hbm, scale_hbm, *, n_tiles: int,
                 dma.start()
             return 0
 
-        jax.lax.fori_loop(0, n_tiles, tile_step, 0)
+        with annotate("stream/ring_steady"):
+            jax.lax.fori_loop(0, n_tiles, tile_step, 0)
 
         # drain: the last min(N_SLOTS, n_tiles) out-copies are still in flight
-        for k in range(max(0, n_tiles - N_SLOTS), n_tiles):
-            for dma in out_dmas(k % N_SLOTS, k):
-                dma.wait()
+        with annotate("stream/ring_drain"):
+            for k in range(max(0, n_tiles - N_SLOTS), n_tiles):
+                for dma in out_dmas(k % N_SLOTS, k):
+                    dma.wait()
 
     pl.run_scoped(
         body,

@@ -90,27 +90,34 @@ def measure(arch, shape_name, variants, multi_pod=False):
     from repro.launch.costing import corrected_costs, model_flops
     from repro.launch.mesh import make_production_mesh
     from repro.launch import hlo_analysis as hlo
+    from repro.obs import trace as obs_trace
 
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     sync, extra = apply_variants(variants, mesh, cfg)
     try:
-        # full lowering -> memory proof
+        # full lowering -> memory proof (each phase is a flight-recorder span
+        # when tracing is on, so a traced hillclimb shows where compiles go)
         t0 = time.time()
-        if shape.kind == "train":
-            ga = None
-            if extra.get("accum_mult"):
-                ga = dr.auto_grad_accum(cfg, shape, 32 if multi_pod else 16) * extra["accum_mult"]
-            low = dr.build_train_lowering(cfg, mesh, shape, sync_mode=sync, grad_accum=ga)
-        elif shape.kind == "prefill":
-            low = dr.build_prefill_lowering(cfg, mesh, shape)
-        else:
-            low = dr.build_decode_lowering(cfg, mesh, shape)
-        comp = low.compile()
-        mem = hlo.memory_dict(comp)
+        with obs_trace.span("perf/lower", arch=arch, shape=shape_name,
+                            sync=sync):
+            if shape.kind == "train":
+                ga = None
+                if extra.get("accum_mult"):
+                    ga = dr.auto_grad_accum(cfg, shape, 32 if multi_pod else 16) * extra["accum_mult"]
+                low = dr.build_train_lowering(cfg, mesh, shape, sync_mode=sync, grad_accum=ga)
+            elif shape.kind == "prefill":
+                low = dr.build_prefill_lowering(cfg, mesh, shape)
+            else:
+                low = dr.build_decode_lowering(cfg, mesh, shape)
+        with obs_trace.span("perf/compile", arch=arch, shape=shape_name):
+            comp = low.compile()
+        with obs_trace.span("perf/memory"):
+            mem = hlo.memory_dict(comp)
         # corrected costs (re-applies the same variant flags inside)
-        cc = corrected_costs(cfg, mesh, shape_name, sync_mode=sync)
+        with obs_trace.span("perf/corrected_costs"):
+            cc = corrected_costs(cfg, mesh, shape_name, sync_mode=sync)
         c = cc["corrected"]
         terms = {
             "compute_s": c.get("flops", 0.0) / PEAK_FLOPS,
@@ -143,7 +150,15 @@ def main():
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     variants = [v for v in args.variants.split(",") if v]
+    from repro.obs import trace as obs_trace
+
     rec = measure(args.arch, args.shape, variants, args.multi_pod)
+    if obs_trace.enabled():
+        # every perf row carries its trace file (REPRO_TRACE=1)
+        obs_trace.set_meta(label=f"perf_{args.arch}_{args.shape}",
+                           variants=",".join(variants))
+        rec["trace"] = obs_trace.export_jsonl(
+            f"TRACE_perf_{args.arch}_{args.shape}.jsonl")
     print(json.dumps(rec, indent=2))
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

@@ -1,0 +1,37 @@
+"""repro.obs — observability for the comm stack: round-trace flight recorder,
+metrics registry, and measured-vs-modeled round reports.
+
+Layers:
+  trace    lightweight span API (``span("sync/encode", level="inter")`` as a
+           context manager or decorator) over a monotonic clock and a
+           thread-safe ring buffer acting as a flight recorder; exporters to
+           per-round JSONL and Chrome ``chrome://tracing`` JSON, plus an
+           optional ``jax.profiler`` passthrough so spans line up with XLA
+           profiles.  Near-zero cost when disabled: the module-level enable
+           flag short-circuits to a shared no-op span, and code *inside* jit
+           uses ``annotate`` (trace-time ``jax.named_scope``) — host-clock
+           spans only wrap dispatch boundaries, never force a device sync.
+  metrics  counter/gauge/histogram registry with per-round time series; it
+           ingests ``CommLedger.bytes_by_tag`` and per-level ``LevelCost``
+           so bytes-by-level/compressor are first-class series next to loss
+           and grad-norm.
+  report   joins a trace JSONL with the ``RoundCost`` model: per-round
+           breakdown of measured wall-time per phase (pack -> encode ->
+           allreduce -> decode -> adopt) vs ``serial_time_s`` /
+           ``pipelined_time_s`` predictions with a model_error% column, and
+           a per-level measured-bytes-vs-CommLedger audit.
+           CLI: ``python -m repro.obs.report TRACE.jsonl [--metrics M.json]``
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               registry)
+from repro.obs.trace import (Span, Tracer, ambient, annotate, disable, enable,
+                             enabled, export_chrome_trace, export_jsonl,
+                             get_tracer, load_jsonl, set_meta, span,
+                             step_annotation, traced)
+
+__all__ = [
+    "Span", "Tracer", "span", "traced", "ambient", "annotate",
+    "step_annotation", "enable", "disable", "enabled", "get_tracer",
+    "set_meta", "export_jsonl", "export_chrome_trace", "load_jsonl",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "registry",
+]

@@ -10,9 +10,10 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.models import init_params
+from repro.obs import trace as obs_trace
 from repro.training.checkpoint import save_checkpoint
 from repro.training.steps import TrainState, init_train_state, make_train_step
-from repro.utils.logging import get_logger
+from repro.utils.logging import get_logger, log_kv
 
 log = get_logger("train")
 
@@ -50,23 +51,48 @@ def train(cfg: ModelConfig, tc: TrainConfig, batches: Iterator[dict],
                      "%.3f MB/round  %.2f ms/round",
                      lv.name, lv.fanout, lv.period, lv.compressor,
                      lv.bytes_per_round / 1e6, lv.time_s * 1e3)
+        if obs_trace.enabled():
+            from repro.obs import registry
+
+            registry.observe_round_cost(0, cost)
 
     history = []
     t0 = time.time()
     for step in range(steps):
-        batch = next(batches)
-        tokens = batch["tokens"]
-        model_batch = {"tokens": jnp.asarray(tokens[:, :-1]),
-                       "targets": jnp.asarray(tokens[:, 1:])}
-        for k, v in batch.items():
-            if k != "tokens":
-                model_batch[k] = jnp.asarray(v)
-        state, metrics = step_fn(state, model_batch)
-        history.append({k: float(v) for k, v in metrics.items()})
-        if step % log_every == 0 or step == steps - 1:
-            dt = time.time() - t0
-            log.info("step %4d loss %.4f grad_norm %.3f (%.2fs)",
-                     step, history[-1]["loss"], history[-1]["grad_norm"], dt)
+        tracing = obs_trace.enabled()
+        # round boundary: the span covers batch staging + step dispatch, but
+        # never blocks on device values — the blocking fetch is its own span
+        with obs_trace.span("round/step", round=step), \
+                obs_trace.step_annotation(step):
+            batch = next(batches)
+            tokens = batch["tokens"]
+            model_batch = {"tokens": jnp.asarray(tokens[:, :-1]),
+                           "targets": jnp.asarray(tokens[:, 1:])}
+            for k, v in batch.items():
+                if k != "tokens":
+                    model_batch[k] = jnp.asarray(v)
+            state, metrics = step_fn(state, model_batch)
+        # metrics stay on device (async dispatch): one jax.device_get per log
+        # point instead of a blocking float(v) transfer per metric per step
+        history.append(metrics)
+        log_step = step % log_every == 0 or step == steps - 1
+        if tracing or log_step:
+            with obs_trace.span("round/blocking_fetch", round=step):
+                fetched = jax.device_get(metrics)
+            if tracing:
+                from repro.obs import registry
+
+                vals = {k: float(v) for k, v in fetched.items()}
+                registry.observe_train_step(step, vals)
+                log_kv(log, "round", step=step, **vals)
+            if log_step:
+                dt = time.time() - t0
+                log.info("step %4d loss %.4f grad_norm %.3f (%.2fs)",
+                         step, float(fetched["loss"]),
+                         float(fetched["grad_norm"]), dt)
+    # one transfer drains every step's still-on-device metrics
+    history = [{k: float(v) for k, v in h.items()}
+               for h in jax.device_get(history)]
     if ckpt_path:
         save_checkpoint(ckpt_path, state.params, step=steps)
         log.info("saved checkpoint to %s", ckpt_path)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SyncConfig, TrainConfig
 from repro.core import distributed as dist
+from repro.obs.trace import annotate
 from repro.sharding.context import constrain_grads
 from repro.models import loss_fn, prefill, decode_step as model_decode_step
 from repro.optim.optimizers import apply_updates, clip_by_global_norm, make_optimizer
@@ -95,10 +96,13 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_groups: int, n_pods: in
             lambda a: a.reshape((G, a.shape[0] // G) + a.shape[1:]), batch)
 
     # ------------------------------------------------------------------ dense
+    # phase annotations are trace-safe jax.named_scopes (repro.obs): they name
+    # the step phases in jaxpr/XLA profiles and cost nothing at runtime
     def dense_step(state: TrainState, batch):
         A = max(1, tc.grad_accum)
         if A == 1:
-            (loss, parts), grads = grad_fn(state.params, batch)
+            with annotate("step/grad"):
+                (loss, parts), grads = grad_fn(state.params, batch)
             grads = constrain_grads(grads)
         else:
             # microbatch accumulation: bounds remat-residual memory by 1/A
@@ -123,8 +127,10 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_groups: int, n_pods: in
             loss = lsum / A
             parts = {"ce": loss}
         grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
-        updates, opt_state = opt.update(grads, state.opt_state, state.params)
-        params = apply_updates(state.params, updates)
+        with annotate("step/apply"):
+            updates, opt_state = opt.update(grads, state.opt_state,
+                                            state.params)
+            params = apply_updates(state.params, updates)
         metrics = {"loss": loss, "ce": parts["ce"], "grad_norm": gnorm}
         return TrainState(params, opt_state, None, state.key), metrics
 
@@ -132,16 +138,20 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_groups: int, n_pods: in
     def efbv_step(state: TrainState, batch):
         key, sub = jax.random.split(state.key)
         gbatch = _split_groups(batch, n_groups)
-        (loss_g, parts), grads_g = jax.vmap(grad_fn, in_axes=(None, 0))(
-            state.params, gbatch)
+        with annotate("step/grad"):
+            (loss_g, parts), grads_g = jax.vmap(grad_fn, in_axes=(None, 0))(
+                state.params, gbatch)
         loss = jnp.mean(loss_g)
-        g_est, sync_state = dist.efbv_sync(
-            sub, grads_g, state.sync_state, compressor, lam, nu,
-            bucket_size=sync.bucket_size)
+        with annotate("step/sync"):
+            g_est, sync_state = dist.efbv_sync(
+                sub, grads_g, state.sync_state, compressor, lam, nu,
+                bucket_size=sync.bucket_size)
         g_est = tree_map(lambda g, p: g.astype(p.dtype), g_est, state.params)
         g_est, gnorm = clip_by_global_norm(g_est, tc.grad_clip)
-        updates, opt_state = opt.update(g_est, state.opt_state, state.params)
-        params = apply_updates(state.params, updates)
+        with annotate("step/apply"):
+            updates, opt_state = opt.update(g_est, state.opt_state,
+                                            state.params)
+            params = apply_updates(state.params, updates)
         metrics = {"loss": loss, "ce": jnp.mean(parts["ce"]), "grad_norm": gnorm}
         return TrainState(params, opt_state, sync_state, key), metrics
 
@@ -161,16 +171,18 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_groups: int, n_pods: in
             updates, opt_state = opt.update(grads, opt_state, params)
             return apply_updates(params, updates), opt_state, loss, gnorm
 
-        params_g, opt_state, loss_g, gnorm_g = jax.vmap(one_group)(
-            state.params, state.opt_state, gbatch)
-        if cascade:
-            params_g, sync_state = dist.tree_param_sync(
-                sub, params_g, state.sync_state, cascade,
-                bucket_size=sync.bucket_size)
-        else:
-            params_g, sync_state = dist.hier_param_sync(
-                sub, params_g, state.sync_state, compressor, lam,
-                sync.sync_period, bucket_size=sync.bucket_size)
+        with annotate("step/local_updates"):
+            params_g, opt_state, loss_g, gnorm_g = jax.vmap(one_group)(
+                state.params, state.opt_state, gbatch)
+        with annotate("step/sync"):
+            if cascade:
+                params_g, sync_state = dist.tree_param_sync(
+                    sub, params_g, state.sync_state, cascade,
+                    bucket_size=sync.bucket_size)
+            else:
+                params_g, sync_state = dist.hier_param_sync(
+                    sub, params_g, state.sync_state, compressor, lam,
+                    sync.sync_period, bucket_size=sync.bucket_size)
         metrics = {"loss": jnp.mean(loss_g), "ce": jnp.mean(loss_g),
                    "grad_norm": jnp.mean(gnorm_g)}
         return TrainState(params_g, opt_state, sync_state, key), metrics
