@@ -1,0 +1,305 @@
+"""Fault-injection benchmark: graceful degradation on the edge-FL hierarchy.
+
+Sweeps dropout x straggler x deadline on the ``edge_fl_tree`` preset and
+reports the robustness trade-off the fault model exposes: tighter deadlines
+finish rounds sooner but aggregate over fewer survivors; lossy links cost
+retry bytes (charged to the ledger's ``retry`` tag) instead of silently
+shipping corrupt planes.
+
+Rows:
+  faults/nofault_edge_fl     modeled round with no fault config (baseline)
+  faults/disabled_identity   a disabled ``FaultConfig()`` produces the same
+                             bytes/time as no config at all (acceptance)
+  faults/sweep_*             dropout x straggler x deadline: total bytes
+                             (retry included), retry bytes, degraded round
+                             time on edge_fl_tree
+  faults/deadline_monotone   degraded round time is non-decreasing in the
+                             deadline (acceptance: the deadline knob trades
+                             completion time against survivors monotonically)
+  faults/survivors_empirical FaultModel round plans averaged over rounds —
+                             drops/retries/survivor fraction actually drawn
+  faults/replay              two models, same (seed, round) -> identical plan
+  faults/consensus_*         degraded tree_param_sync on a synthetic
+                             consensus problem: error still contracts under
+                             dropouts and deadline-based partial aggregation
+
+``--corrupt-audit`` runs a tiny traced round, verifies the report CLI is
+green on the intact artifacts, stays green when only the untraced ``retry``
+tag is present, and exits non-zero once a level's ledger bytes are tampered
+with — plus the codec-level checksum catching an actually-corrupted payload.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+from benchmarks.common import emit
+from repro.comm import round_cost
+from repro.configs.base import LevelConfig, SyncConfig
+from repro.faults import FaultConfig, FaultModel
+
+P = 8  # base uplink sync period (matches bench_hier's edge_fl schedule)
+
+EDGE_LEVELS = (
+    LevelConfig("uplink", P, "top_k", 0.05),
+    LevelConfig("metro", 2 * P, "qsgd", quant_bits=8),
+    LevelConfig("wan", 4 * P, "top_k", 0.01),
+)
+
+
+def _smoke() -> bool:
+    return os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+
+def _sync(faults=None) -> SyncConfig:
+    return SyncConfig(mode="hier", topology="edge_fl_tree", levels=EDGE_LEVELS,
+                      faults=faults)
+
+
+def _fmt_dl(dl: float) -> str:
+    return "inf" if math.isinf(dl) else f"{dl:g}"
+
+
+def _model_rows(n_params: int):
+    base = round_cost(_sync(), n_params)
+    rows = [(f"faults/nofault_edge_fl", base.time_s * 1e6,
+             f"bytes={int(base.total_bytes)};t_ms={base.time_s * 1e3:.2f};"
+             f"retry=0")]
+
+    # acceptance: FaultConfig() is all-off => identical bytes and time
+    off = round_cost(_sync(FaultConfig()), n_params)
+    same = (off.total_bytes == base.total_bytes and off.time_s == base.time_s
+            and off.retry_bytes == 0.0 and off.degraded_time_s == 0.0)
+    assert same, (off, base)
+    rows.append(("faults/disabled_identity", off.time_s * 1e6,
+                 f"bytes={int(off.total_bytes)};matches_nofault={same}"))
+
+    for drop in (0.0, 0.05, 0.2):
+        for stragglers in (0.0, 0.3):
+            for dl in (2.0, 10.0, math.inf):
+                fc = FaultConfig(seed=1, drop_rate=drop,
+                                 straggler_rate=stragglers,
+                                 straggler_sigma=1.0, deadline_s=dl)
+                cost = round_cost(_sync(fc), n_params)
+                t = cost.degraded_time_s if fc.enabled() else cost.time_s
+                rows.append((
+                    f"faults/sweep_drop{drop:g}_str{stragglers:g}"
+                    f"_dl{_fmt_dl(dl)}", t * 1e6,
+                    f"bytes={int(cost.total_bytes)};"
+                    f"retry={int(cost.retry_bytes)};"
+                    f"t_degraded_ms={t * 1e3:.2f}"))
+    return rows
+
+
+def _deadline_monotone_row(n_params: int):
+    """Acceptance: degraded round time is non-decreasing in the deadline."""
+    fc0 = FaultConfig(seed=1, drop_rate=0.1, straggler_rate=0.3,
+                      straggler_sigma=1.5)
+    times = []
+    for dl in (1.0, 2.0, 5.0, 20.0, math.inf):
+        import dataclasses
+
+        fc = dataclasses.replace(fc0, deadline_s=dl)
+        times.append(round_cost(_sync(fc), n_params).degraded_time_s)
+    for a, b in zip(times, times[1:]):
+        assert a <= b * (1.0 + 1e-9), times
+    return [("faults/deadline_monotone", times[-1] * 1e6,
+             "t_ms=" + ",".join(f"{t * 1e3:.2f}" for t in times)
+             + ";monotone=True")]
+
+
+def _empirical_rows(n_rounds: int):
+    from repro.comm import get_tree_topology
+
+    tree = get_tree_topology("edge_fl_tree")
+    fc = FaultConfig(seed=7, availability=0.9, drop_rate=0.05,
+                     straggler_rate=0.2, straggler_sigma=1.0, deadline_s=20.0)
+    fm = FaultModel(fc, tree)
+    drops = retries = 0
+    frac = {lev.name: 0.0 for lev in tree.levels}
+    for t in range(n_rounds):
+        plan = fm.round_plan(t)
+        s = plan.stats()
+        drops += s["drops"]
+        retries += s["retries"]
+        for lev in tree.levels:
+            frac[lev.name] += s[f"survivor_frac/{lev.name}"]
+    fr = ",".join(f"{k}:{v / n_rounds:.3f}" for k, v in frac.items())
+    rows = [("faults/survivors_empirical", 0.0,
+             f"rounds={n_rounds};drops={drops};retries={retries};"
+             f"survivor_frac={fr}")]
+
+    # acceptance: the counter PRNG replays any round from (seed, round) alone
+    fm2 = FaultModel(fc, tree)
+    p1, p2 = fm.round_plan(n_rounds // 2), fm2.round_plan(n_rounds // 2)
+    same = all((a.survivors == b.survivors).all()
+               and (a.arrival_s == b.arrival_s).all()
+               for a, b in zip(p1.levels, p2.levels))
+    assert same
+    rows.append(("faults/replay", 0.0,
+                 f"round={n_rounds // 2};identical={same}"))
+    return rows
+
+
+def _consensus_rows(n_rounds: int):
+    """Degraded tree sync on a synthetic consensus problem.
+
+    12 leaves (fanouts 4x3), each pulling its replica toward its own target;
+    the tree sync pulls everyone toward the global mean.  Under dropouts and
+    deadlines the aggregate uses fewer children per round, but the consensus
+    error must still contract — graceful degradation, not divergence.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.comm import Link, TreeLevel, TreeTopology
+    from repro.core import distributed as dist
+
+    levels = (LevelConfig("cell", 1, "identity"),
+              LevelConfig("cloud", 1, "identity"))
+    tree = TreeTopology("faults_consensus_tree", (
+        TreeLevel("cell", 4, Link(gbps=1.0, latency_us=100.0)),
+        TreeLevel("cloud", 3, Link(gbps=0.1, latency_us=1000.0)),
+    ))
+    cascade = dist.build_cascade(
+        SyncConfig(mode="hier", levels=levels, topology="edge_fl_tree"), tree)
+    G, d, lr = 12, 32, 0.3
+    key = jax.random.PRNGKey(0)
+    targets = jax.random.normal(key, (G, d))
+    center = jnp.mean(targets, axis=0)
+    # the no-sync fixed point: every leaf sits at its own target — the
+    # yardstick degraded rounds must stay well inside of
+    err_local = float(jnp.mean(jnp.linalg.norm(targets - center, axis=-1)))
+
+    def run_case(name, fc):
+        params = {"w": jnp.zeros((G, d))}
+        st = dist.tree_sync_state_init({"w": jnp.zeros((d,))}, cascade)
+        fm = FaultModel(fc, tree) if fc is not None and fc.enabled() else None
+        err0 = float(jnp.mean(jnp.linalg.norm(params["w"] - center, axis=-1)))
+        for t in range(n_rounds):
+            w = params["w"] - lr * (params["w"] - targets)
+            surv = (tuple(jnp.asarray(m)
+                          for m in fm.round_plan(t).survivor_masks())
+                    if fm is not None else None)
+            params, st = dist.tree_param_sync(
+                jax.random.fold_in(key, t), {"w": w}, st, cascade,
+                survivors=surv)
+        err = float(jnp.mean(jnp.linalg.norm(params["w"] - center, axis=-1)))
+        return err0, err, params
+
+    err0, err_clean, p_clean = run_case("nofault", None)
+    _, err_disabled, p_disabled = run_case("disabled", FaultConfig())
+    # acceptance: a disabled config takes the exact legacy path bit-for-bit
+    bitwise = bool(jnp.all(p_clean["w"] == p_disabled["w"]))
+    assert bitwise
+    _, err_drop, _ = run_case("dropout", FaultConfig(
+        seed=5, availability=0.7, drop_rate=0.1))
+    _, err_dl, _ = run_case("deadline", FaultConfig(
+        seed=5, availability=0.8, straggler_rate=0.4, straggler_sigma=2.0,
+        deadline_s=0.005))
+    # acceptance: the faultless cascade reaches consensus, and degraded
+    # rounds stay far inside the no-sync fixed point (graceful degradation:
+    # dropped leaves drift one local step, then re-anchor)
+    assert np.isfinite(err_clean) and err_clean < 0.1 * err_local, (
+        err_clean, err_local)
+    for e in (err_drop, err_dl):
+        assert np.isfinite(e) and e < 0.5 * err_local, (e, err_local)
+    return [
+        ("faults/consensus_nofault", 0.0,
+         f"err0={err0:.3f};err={err_clean:.4f};err_nosync={err_local:.3f};"
+         f"disabled_bitwise={bitwise}"),
+        ("faults/consensus_dropout", 0.0,
+         f"err0={err0:.3f};err={err_drop:.4f};"
+         f"vs_nosync={err_drop / err_local:.3f}"),
+        ("faults/consensus_deadline", 0.0,
+         f"err0={err0:.3f};err={err_dl:.4f};"
+         f"vs_nosync={err_dl / err_local:.3f}"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# CI audit mode
+# ---------------------------------------------------------------------------
+def corrupt_audit(out_dir: str = ".") -> int:
+    """Corrupt-payload / tampered-ledger audit for CI.
+
+    1. the codec checksum rejects an actually-corrupted payload;
+    2. the report CLI is green on an intact traced round;
+    3. adding retry-tag-only ledger bytes keeps it green (untraced tag);
+    4. tampering a level's ledger bytes turns it non-zero.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.bench_comm import traced_round
+    from repro.comm import PayloadError, decode, encode, seal_payload
+    from repro.core import compressors as C
+    from repro.faults import corrupt_payload
+    from repro.obs import report as report_mod
+
+    # 1: checksum catches a one-byte flip in a sealed payload
+    p = seal_payload(encode(C.qsgd(8), jax.random.PRNGKey(0),
+                            jax.random.normal(jax.random.PRNGKey(1), (4096,))))
+    plane = corrupt_payload(p, rnd=0, seed=3)
+    try:
+        decode(p)
+        raise AssertionError("corrupted payload decoded cleanly")
+    except PayloadError as e:
+        print(f"# checksum caught corruption in plane {plane!r}: {e}",
+              file=sys.stderr)
+
+    # 2: intact artifacts -> rc 0
+    trace_path, metrics_path = traced_round(
+        out_dir=out_dir, n_params=1 << 10, label="bench_faults_audit")
+    rc = report_mod.main([trace_path, "--metrics", metrics_path])
+    assert rc == 0, f"clean report exited {rc}"
+
+    with open(metrics_path) as f:
+        doc = json.load(f)
+
+    # 3: retry bytes are ledger-only and must not fail the audit
+    retry_doc = dict(doc)
+    retry_doc["ledger_bytes_by_tag"] = dict(doc["ledger_bytes_by_tag"],
+                                            retry=4096.0)
+    retry_path = os.path.join(out_dir, "METRICS_retry.json")
+    with open(retry_path, "w") as f:
+        json.dump(retry_doc, f)
+    rc = report_mod.main([trace_path, "--metrics", retry_path])
+    assert rc == 0, f"retry-tag-only report exited {rc}"
+
+    # 4: a tampered level total must fail the byte audit
+    bad_doc = dict(doc)
+    tags = dict(doc["ledger_bytes_by_tag"])
+    lvl = next(iter(sorted(tags)))
+    tags[lvl] += 128.0
+    bad_doc["ledger_bytes_by_tag"] = tags
+    bad_path = os.path.join(out_dir, "METRICS_bad.json")
+    with open(bad_path, "w") as f:
+        json.dump(bad_doc, f)
+    rc = report_mod.main([trace_path, "--metrics", bad_path])
+    assert rc != 0, "tampered ledger bytes passed the audit"
+    print(f"# tampered {lvl!r} ledger bytes correctly failed the audit "
+          f"(rc={rc})", file=sys.stderr)
+    return 0
+
+
+def run(smoke: bool = False):
+    smoke = smoke or _smoke()
+    n_params = (1 << 15) if smoke else 1_000_000
+    n_rounds = 8 if smoke else 64
+    return (_model_rows(n_params) + _deadline_monotone_row(n_params)
+            + _empirical_rows(n_rounds) + _consensus_rows(n_rounds))
+
+
+def main():
+    argv = sys.argv[1:]
+    if "--corrupt-audit" in argv:
+        sys.exit(corrupt_audit(os.environ.get("BENCH_TRACE_DIR", ".")))
+    emit(run(smoke="--smoke" in argv))
+
+
+if __name__ == "__main__":
+    main()

@@ -28,7 +28,8 @@ from typing import List, Tuple
 BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "baselines")
 DEFAULT_PAIRS = (("BENCH_comm.json", "BENCH_comm.json"),
-                 ("BENCH_hier.json", "BENCH_hier.json"))
+                 ("BENCH_hier.json", "BENCH_hier.json"),
+                 ("BENCH_faults.json", "BENCH_faults.json"))
 
 
 def load_rows(path: str) -> dict:

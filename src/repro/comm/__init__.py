@@ -29,27 +29,32 @@ from repro.comm.accounting import (LevelCost, RoundCost, measured_payload_bits,
 from repro.comm.buckets import (DEFAULT_BUCKET_SIZE, BucketLayout, bucketize,
                                 bucketize_groups, debucketize,
                                 debucketize_groups)
-from repro.comm.codecs import (DEFAULT_TILE, Chunk, Payload, StreamPayload,
-                               analytic_bits, decode, decode_stream, encode,
-                               encode_stream, encoded_bits, roundtrip_equal,
-                               split_payload, stream_roundtrip_equal)
+from repro.comm.codecs import (DEFAULT_TILE, Chunk, Payload, PayloadError,
+                               StreamPayload, analytic_bits, decode,
+                               decode_stream, encode, encode_stream,
+                               encoded_bits, roundtrip_equal, seal_payload,
+                               split_payload, stream_roundtrip_equal,
+                               validate_payload, verify_payload)
 from repro.comm.ledger import CommLedger, CommRecord, crosscheck_hlo
 from repro.comm.topology import (DEFAULT_PROFILE, DEFAULT_TILE_BYTES, PRESETS,
                                  CodecProfile, Link, Topology, get_topology,
-                                 pipelined_time_s, ring_parts_s, ring_time_s,
+                                 norm_ppf, pipelined_time_s, ring_parts_s,
+                                 ring_time_s, straggler_level_time_s,
                                  stream_pipeline_s)
 from repro.comm.tree import (TREE_PRESETS, TreeLevel, TreeTopology,
                              get_tree_topology, register_tree_topology)
 
 __all__ = [
-    "Payload", "Chunk", "StreamPayload", "encode", "decode", "encode_stream",
-    "decode_stream", "split_payload", "encoded_bits", "analytic_bits",
-    "roundtrip_equal", "stream_roundtrip_equal", "DEFAULT_TILE",
+    "Payload", "PayloadError", "Chunk", "StreamPayload", "encode", "decode",
+    "encode_stream", "decode_stream", "split_payload", "encoded_bits",
+    "analytic_bits", "roundtrip_equal", "stream_roundtrip_equal",
+    "seal_payload", "verify_payload", "validate_payload", "DEFAULT_TILE",
     "BucketLayout", "bucketize", "bucketize_groups", "debucketize",
     "debucketize_groups", "DEFAULT_BUCKET_SIZE",
     "CommLedger", "CommRecord", "crosscheck_hlo",
     "Link", "Topology", "PRESETS", "get_topology", "CodecProfile",
     "pipelined_time_s", "stream_pipeline_s", "ring_parts_s", "ring_time_s",
+    "norm_ppf", "straggler_level_time_s",
     "DEFAULT_PROFILE", "DEFAULT_TILE_BYTES",
     "TreeTopology", "TreeLevel", "TREE_PRESETS", "get_tree_topology",
     "register_tree_topology",

@@ -46,6 +46,8 @@ class LevelCost:
     bytes_per_round: float   # encoded bytes, amortized over the level period
     time_s: float            # amortized simulated time (streamed if enabled)
     serial_time_s: float     # amortized monolithic pack -> ring -> unpack
+    retry_bytes: float = 0.0      # expected retransmitted bytes (faults)
+    degraded_time_s: float = 0.0  # straggler order-stat time, deadline-capped
 
 
 @dataclass(frozen=True)
@@ -64,10 +66,14 @@ class RoundCost:
     serial_time_s: float = 0.0   # monolithic pack -> send -> unpack wall-clock
     tile_bytes: int = 0          # streamed transport tile (0 = monolithic)
     levels: Tuple[LevelCost, ...] = ()  # per-level attribution (hier modes)
+    retry_bytes: float = 0.0     # expected retransmitted bytes (fault model;
+                                 # the ledger charges these under tag "retry")
+    degraded_time_s: float = 0.0  # expected round time under stragglers/
+                                  # deadlines (order statistics, not the mean)
 
     @property
     def total_bytes(self) -> float:
-        return self.intra_bytes + self.inter_bytes
+        return self.intra_bytes + self.inter_bytes + self.retry_bytes
 
     @property
     def stream_speedup(self) -> float:
@@ -118,9 +124,11 @@ def _hier_tree(sync, topology: Optional[Topology]) -> TreeTopology:
 
 def _level_costs(sync, n_params: int, tree: TreeTopology, tile_bytes: int,
                  key=None, profile: Optional[CodecProfile] = None,
-                 ) -> Tuple[LevelCost, ...]:
+                 faults=None) -> Tuple[LevelCost, ...]:
     """Per-level byte/time attribution of one tree round (per child node).
-    ``profile`` overrides every compressed level's codec profile."""
+    ``profile`` overrides every compressed level's codec profile; ``faults``
+    (a ``FaultConfig``) adds expected retransmission bytes and the
+    deadline-capped straggler order-statistic time per level."""
     from repro.core.distributed import make_sync_compressor
 
     lcfgs = _hier_levels(sync)
@@ -128,6 +136,7 @@ def _level_costs(sync, n_params: int, tree: TreeTopology, tile_bytes: int,
         raise ValueError(
             f"sync has {len(lcfgs)} levels but tree topology {tree.name!r} "
             f"has {len(tree.levels)}")
+    faulty = faults is not None and faults.enabled()
     out = []
     for l, (lc, tl) in enumerate(zip(lcfgs, tree.levels)):
         period = max(1, lc.period)
@@ -143,9 +152,18 @@ def _level_costs(sync, n_params: int, tree: TreeTopology, tile_bytes: int,
             stream = (tree.level_stream_time_s(l, enc_bytes, tile_bytes,
                                                profile=profile)
                       if tile_bytes > 0 else serial)
+        retry_b = degraded = 0.0
+        if faulty:
+            lf = tree.level_faults(l, faults)
+            e_tx = faults.expected_transmissions(lf.loss_rate)
+            retry_b = (e_tx - 1.0) * enc_bytes / period
+            degraded = tree.level_degraded_time_s(
+                l, enc_bytes, faults, codec=lc.compressor != "identity",
+                profile=profile) / period
         out.append(LevelCost(tl.name, tl.fanout, period, lc.compressor,
                              tl.link.gbps, enc_bytes / period,
-                             stream / period, serial / period))
+                             stream / period, serial / period,
+                             retry_bytes=retry_b, degraded_time_s=degraded))
     return tuple(out)
 
 
@@ -170,14 +188,17 @@ def round_cost(sync, n_params: int, topology=None,
     tile_bytes = int(getattr(sync, "stream_tile_bytes", DEFAULT_TILE_BYTES))
     dense_bytes = 4.0 * n_params
 
+    faults = getattr(sync, "faults", None)
     if sync.mode == "hier":
         tree = _hier_tree(sync, topology)
         lvls = _level_costs(sync, n_params, tree, tile_bytes, key=key,
-                            profile=profile)
+                            profile=profile, faults=faults)
         intra = lvls[0].bytes_per_round
         inter = sum(lv.bytes_per_round for lv in lvls[1:])
         serial_s = sum(lv.serial_time_s for lv in lvls)
         stream_s = sum(lv.time_s for lv in lvls)
+        retry_b = sum(lv.retry_bytes for lv in lvls)
+        degraded_s = sum(lv.degraded_time_s for lv in lvls)
         # the paper's per-node bits metric: every compressed level, plus
         # dense non-leaf levels (fp32 on a real link); the leaf level's dense
         # fabric sync is the one hop it excludes
@@ -194,7 +215,8 @@ def round_cost(sync, n_params: int, topology=None,
         return RoundCost(sync.mode, n_params, intra, inter,
                          stream_s if tile_bytes > 0 else serial_s,
                          bits, analytic, serial_time_s=serial_s,
-                         tile_bytes=max(0, tile_bytes), levels=lvls)
+                         tile_bytes=max(0, tile_bytes), levels=lvls,
+                         retry_bytes=retry_b, degraded_time_s=degraded_s)
 
     topo = topology or get_topology(getattr(sync, "topology", "v5p_superpod"))
     if isinstance(topo, TreeTopology):
@@ -236,10 +258,23 @@ def round_cost(sync, n_params: int, topology=None,
     # report tile_bytes=0 so consumers don't claim a pipeline that isn't there
     if sync.mode in ("dense", "local"):
         tile_bytes = 0
+    retry_b = degraded_s = 0.0
+    if faults is not None and faults.enabled():
+        # flat modes: the slow inter link is the faulty one (depth-1 view)
+        from repro.comm.topology import straggler_level_time_s
+
+        lf = faults.link_faults("inter")
+        e_tx = faults.expected_transmissions(lf.loss_rate)
+        retry_b = (e_tx - 1.0) * inter
+        degraded_s = straggler_level_time_s(
+            serial_s * e_tx + faults.backoff_s * (e_tx - 1.0),
+            faults.straggler_rate, faults.straggler_sigma, topo.n_pods,
+            faults.level_deadline_s("inter"))
     return RoundCost(sync.mode, n_params, intra, inter,
                      stream_s if tile_bytes > 0 else serial_s,
                      bits, analytic, serial_time_s=serial_s,
-                     tile_bytes=max(0, tile_bytes))
+                     tile_bytes=max(0, tile_bytes),
+                     retry_bytes=retry_b, degraded_time_s=degraded_s)
 
 
 def round_ledger(sync, n_params: int, n_rounds: Optional[int] = None,
@@ -250,12 +285,17 @@ def round_ledger(sync, n_params: int, n_rounds: Optional[int] = None,
 
     Defaults to one full root period of rounds, over which the per-level
     record bytes average exactly to ``RoundCost.total_bytes`` per round.
+    With ``SyncConfig.faults`` enabled, each sync step additionally charges
+    the expected retransmitted bytes under tag ``"retry"`` — disabled or
+    absent faults add no records at all (bit-identical ledger totals).
     """
     if sync.mode != "hier":
         raise ValueError("round_ledger models hier/tree schedules")
     tree = _hier_tree(sync, topology)
     tile_bytes = int(getattr(sync, "stream_tile_bytes", DEFAULT_TILE_BYTES))
-    lvls = _level_costs(sync, n_params, tree, tile_bytes, key=key)
+    faults = getattr(sync, "faults", None)
+    lvls = _level_costs(sync, n_params, tree, tile_bytes, key=key,
+                        faults=faults)
     if n_rounds is None:
         n_rounds = lvls[-1].period
     led = CommLedger()
@@ -263,9 +303,13 @@ def round_ledger(sync, n_params: int, n_rounds: Optional[int] = None,
         for l, lv in enumerate(lvls):
             if (t % lv.period) != (lv.period - 1):
                 continue
+            kind = "intra" if l == 0 else "inter"
             led.record(t, f"{lv.name}->up", round(lv.bytes_per_round * lv.period),
-                       kind="intra" if l == 0 else "inter", phase=l,
-                       tag=lv.name)
+                       kind=kind, phase=l, tag=lv.name)
+            if lv.retry_bytes > 0:
+                led.record(t, f"{lv.name}->up",
+                           round(lv.retry_bytes * lv.period),
+                           kind=kind, phase=l, tag="retry")
     return led
 
 

@@ -28,6 +28,7 @@ that would run on-device.
 from __future__ import annotations
 
 import math
+import zlib
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 
@@ -37,6 +38,19 @@ import numpy as np
 
 from repro.core.compressors import Compressor, WireSpec
 from repro.obs import trace as obs_trace
+
+
+class PayloadError(ValueError):
+    """A wire payload failed validation (truncated/corrupt/inconsistent).
+
+    ``plane`` names the offending plane so transports can report *which*
+    buffer was damaged; decode raises this instead of mis-slicing truncated
+    buffers into garbage tensors.
+    """
+
+    def __init__(self, plane: str, message: str):
+        self.plane = plane
+        super().__init__(f"plane {plane!r}: {message}")
 
 
 @dataclass
@@ -147,8 +161,123 @@ def _encode(c: Compressor, key, x, scheme: Optional[str] = None) -> Payload:
     raise ValueError(f"unknown wire scheme {scheme!r}")
 
 
+def _require(cond: bool, plane: str, message: str) -> None:
+    if not cond:
+        raise PayloadError(plane, message)
+
+
+def validate_payload(p: Payload) -> None:
+    """Check plane lengths / bounds before any slicing; raise ``PayloadError``
+    naming the offending plane on truncated or inconsistent buffers."""
+    d = int(np.prod(p.shape)) if p.shape else 1
+    if p.scheme == "dense":
+        v = p.planes.get("values")
+        _require(v is not None, "values", "missing")
+        _require(v.size == d, "values", f"{v.size} values for shape {p.shape}")
+        return
+    if p.scheme == "sparse_idx32":
+        idx, vals = p.planes.get("indices"), p.planes.get("values")
+        _require(idx is not None, "indices", "missing")
+        _require(vals is not None, "values", "missing")
+        _require(idx.size == vals.size, "indices",
+                 f"{idx.size} indices vs {vals.size} values")
+        if idx.size:
+            _require(int(idx.max()) < d, "indices",
+                     f"index {int(idx.max())} out of range for d={d}")
+        return
+    if p.scheme == "sparse_block":
+        block, nbits = p.meta.get("block"), p.meta.get("nbits")
+        _require(isinstance(block, int) and block > 0, "local_indices",
+                 f"bad block {block!r}")
+        _require(isinstance(nbits, int) and 1 <= nbits <= 56, "local_indices",
+                 f"nbits {nbits!r} outside [1, 56]")
+        counts = p.planes.get("block_counts")
+        _require(counts is not None, "block_counts", "missing")
+        nb = -(-d // block)
+        _require(counts.size == nb, "block_counts",
+                 f"{counts.size} counts for {nb} blocks")
+        _require(bool(np.all(counts.astype(np.int64) <= block)),
+                 "block_counts", f"count exceeds block size {block}")
+        k = int(counts.astype(np.int64).sum())
+        vals = p.planes.get("values")
+        _require(vals is not None, "values", "missing")
+        _require(vals.size == k, "values", f"{vals.size} values for k={k}")
+        stream = p.planes.get("local_indices")
+        _require(stream is not None, "local_indices", "missing")
+        want = (k * nbits + 7) >> 3
+        _require(stream.nbytes == want, "local_indices",
+                 f"{stream.nbytes} bytes, expected {want}")
+        return
+    if p.scheme == "sparse_bitmap":
+        words, vals = p.planes.get("mask_words"), p.planes.get("values")
+        _require(words is not None, "mask_words", "missing")
+        _require(vals is not None, "values", "missing")
+        dd = int(p.meta.get("d", d))
+        nw = -(-dd // 32)
+        _require(words.size == nw, "mask_words",
+                 f"{words.size} words for d={dd}")
+        pop = int(np.unpackbits(
+            np.ascontiguousarray(words).view(np.uint8)).sum())
+        _require(pop == vals.size, "values",
+                 f"{vals.size} values vs {pop} set mask bits")
+        return
+    if p.scheme == "quant":
+        bits = p.meta.get("bits")
+        _require(isinstance(bits, int) and 1 <= bits <= 8, "q",
+                 f"bits {bits!r} outside [1, 8]")
+        q, scales = p.planes.get("q"), p.planes.get("scales")
+        _require(q is not None, "q", "missing")
+        _require(scales is not None, "scales", "missing")
+        if p.meta.get("axis") == "kernel":
+            rows, qb = p.meta["rows"], p.meta["qblock"]
+            kept = _q_keep(int(p.meta["d"]), (rows, qb))
+            want = (kept + 1) // 2 if bits <= 4 else kept
+            _require(q.nbytes == want, "q",
+                     f"{q.nbytes} bytes, expected {want}")
+            _require(scales.size == rows, "scales",
+                     f"{scales.size} scales for {rows} rows")
+            return
+        n = int(np.prod(p.meta["qshape"]))
+        want = (n + 1) // 2 if bits <= 4 else n
+        _require(q.nbytes == want, "q", f"{q.nbytes} bytes, expected {want}")
+        nsc = int(np.prod(p.meta["scale_shape"]))
+        _require(scales.size == nsc, "scales",
+                 f"{scales.size} scales, expected {nsc}")
+        return
+    raise PayloadError("<scheme>", f"unknown wire scheme {p.scheme!r}")
+
+
+def seal_payload(p: Payload) -> Payload:
+    """Stamp a CRC32 per plane into ``meta['crc32']`` (the checksummed
+    payload header a transport ships alongside the planes)."""
+    p.meta["crc32"] = {k: zlib.crc32(np.ascontiguousarray(v).view(np.uint8))
+                       for k, v in p.planes.items()}
+    return p
+
+
+def verify_payload(p: Payload) -> None:
+    """Recompute plane checksums against the sealed header; raise
+    ``PayloadError`` naming the first corrupted plane."""
+    sums = p.meta.get("crc32")
+    if sums is None:
+        return
+    for k, v in p.planes.items():
+        if k not in sums:
+            raise PayloadError(k, "no checksum in sealed header")
+        got = zlib.crc32(np.ascontiguousarray(v).view(np.uint8))
+        if got != sums[k]:
+            raise PayloadError(
+                k, f"checksum mismatch (got {got:#010x}, "
+                   f"sealed {sums[k]:#010x})")
+
+
 def decode(p: Payload):
-    """Reconstruct the dense compressed carrier from the wire planes."""
+    """Reconstruct the dense compressed carrier from the wire planes.
+
+    Validates plane lengths/bounds (and checksums, when the payload was
+    sealed) up front — truncated or corrupt buffers raise ``PayloadError``
+    instead of mis-slicing into garbage tensors.
+    """
     if obs_trace.enabled():
         with obs_trace.span("codec/decode", scheme=p.scheme,
                             nbytes=p.nbytes):
@@ -157,6 +286,8 @@ def decode(p: Payload):
 
 
 def _decode(p: Payload):
+    validate_payload(p)
+    verify_payload(p)
     if p.scheme == "dense":
         out = p.planes["values"].astype(p.meta.get("plane_dtype", p.dtype))
         return jnp.asarray(out.reshape(p.shape)).astype(p.dtype)

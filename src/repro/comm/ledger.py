@@ -119,6 +119,12 @@ class CommLedger:
             out[r.tag] += r.nbytes
         return dict(out)
 
+    @property
+    def retry_bytes(self) -> int:
+        """Bytes charged to retransmissions (faulty links re-sending after a
+        drop or a checksum-caught corruption, tag ``"retry"``)."""
+        return sum(r.nbytes for r in self.records if r.tag == "retry")
+
     def cumulative_bytes(self) -> List[int]:
         """Running total after each round 0..n_rounds-1 (Fig 2.2 x-axis)."""
         per = self.bytes_by_round()

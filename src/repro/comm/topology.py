@@ -23,10 +23,98 @@ serial ``pack + send + unpack`` sum the monolithic codec pays.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Dict, Sequence
 
 DEFAULT_TILE_BYTES = 1 << 20  # streamed transport tile (bytes on the wire)
+
+
+# ---------------------------------------------------------------------------
+# straggler order statistics — expected round time under deadlines
+# ---------------------------------------------------------------------------
+def norm_ppf(p: float) -> float:
+    """Standard-normal inverse CDF (Acklam's rational approximation,
+    |rel err| < 1.2e-9 — no scipy in the image)."""
+    if not 0.0 < p < 1.0:
+        raise ValueError(f"p={p} outside (0, 1)")
+    a = (-3.969683028665376e+01, 2.209460984245205e+02,
+         -2.759285104469687e+02, 1.383577518672690e+02,
+         -3.066479806614716e+01, 2.506628277459239e+00)
+    b = (-5.447609879822406e+01, 1.615858368580409e+02,
+         -1.556989798598866e+02, 6.680131188771972e+01,
+         -1.328068155288572e+01)
+    c = (-7.784894002430293e-03, -3.223964580411365e-01,
+         -2.400758277161838e+00, -2.549732539343734e+00,
+         4.374664141464968e+00, 2.938163982698783e+00)
+    d = (7.784695709041462e-03, 3.224671290700398e-01,
+         2.445134137142996e+00, 3.754408661907416e+00)
+    plow, phigh = 0.02425, 1 - 0.02425
+    if p < plow:
+        q = math.sqrt(-2 * math.log(p))
+        return ((((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4])
+                 * q + c[5])
+                / ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1))
+    if p > phigh:
+        q = math.sqrt(-2 * math.log(1 - p))
+        return -((((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4])
+                  * q + c[5])
+                 / ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1))
+    q = p - 0.5
+    r = q * q
+    return ((((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4])
+             * r + a[5]) * q
+            / (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4])
+               * r + 1))
+
+
+def straggler_scale_quantile(q: float, rate: float, sigma: float) -> float:
+    """Quantile of one child's slowdown multiplier under the mixture
+    ``(1-rate) * point_mass(1) + rate * exp(sigma * |N(0,1)|)``."""
+    if q <= 1 - rate or rate <= 0 or sigma <= 0:
+        return 1.0
+    # |z| has CDF 2*Phi(z)-1; invert the mixture's straggler branch
+    inner = min(1.0 - 1e-12, (q - (1 - rate)) / rate)
+    z = norm_ppf((1.0 + inner) / 2.0)
+    return math.exp(sigma * max(0.0, z))
+
+
+def straggler_level_time_s(base_s: float, rate: float, sigma: float,
+                           n: int, deadline_s: float = math.inf) -> float:
+    """Expected completion time of a level waiting on ``n`` children.
+
+    The level finishes at the MAX of n iid slowdown multipliers times
+    ``base_s`` — an order statistic, not the mean: the median of the max is
+    the per-child quantile ``q = 0.5 ** (1/n)``.  A finite deadline caps it
+    (the aggregator stops waiting): ``min(deadline, base * s_q)``.
+    """
+    if n <= 0 or base_s <= 0:
+        return min(base_s, deadline_s) if math.isfinite(deadline_s) else base_s
+    q = 0.5 ** (1.0 / max(1, n))
+    s = straggler_scale_quantile(q, rate, sigma)
+    return min(base_s * s, deadline_s)
+
+
+def deadline_survivor_frac(base_s: float, rate: float, sigma: float,
+                           deadline_s: float) -> float:
+    """P(one child's arrival makes the deadline) under the straggler
+    mixture — the modeled per-level survivor fraction the fault counters
+    measure empirically."""
+    if not math.isfinite(deadline_s):
+        return 1.0
+    if base_s <= 0:
+        return 1.0
+    r = deadline_s / base_s
+    if r < 1.0:
+        return 0.0
+    p_on_time = 1.0 - rate
+    if rate > 0 and sigma > 0 and r > 1.0:
+        # P(exp(sigma*|z|) <= r) = 2*Phi(ln r / sigma) - 1
+        z = math.log(r) / sigma
+        p_on_time += rate * max(0.0, math.erf(z / math.sqrt(2.0)))
+    elif rate > 0 and sigma <= 0:
+        p_on_time += rate  # degenerate stragglers arrive exactly at base_s
+    return min(1.0, p_on_time)
 
 
 @dataclass(frozen=True)

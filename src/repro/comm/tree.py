@@ -19,21 +19,26 @@ preset's numbers bit-for-bit.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 from repro.comm.topology import (DEFAULT_PROFILE, DEFAULT_TILE_BYTES,
                                  CodecProfile, Link, Topology, get_topology,
-                                 ring_parts_s, ring_time_s, stream_pipeline_s)
+                                 ring_parts_s, ring_time_s,
+                                 straggler_level_time_s, stream_pipeline_s)
+from repro.faults.model import FaultConfig, LinkFaults
 
 
 @dataclass(frozen=True)
 class TreeLevel:
     """One aggregation hop: ``fanout`` children reach their parent over
-    ``link``; compressed payloads at this level pay ``profile`` codec time."""
+    ``link``; compressed payloads at this level pay ``profile`` codec time.
+    ``faults`` (optional) attaches this link class's per-message fault rates
+    — a preset-level default a ``FaultConfig`` can still override by name."""
     name: str
     fanout: int
     link: Link
     profile: CodecProfile = DEFAULT_PROFILE
+    faults: Optional[LinkFaults] = None
 
 
 @dataclass(frozen=True)
@@ -67,6 +72,25 @@ class TreeTopology:
         for lev in self.levels[: l + 1]:
             n //= lev.fanout
         return n
+
+    def n_children(self, l: int) -> int:
+        """Number of child nodes feeding level ``l`` (leaves for l=0)."""
+        n = self.n_leaves
+        for lev in self.levels[:l]:
+            n //= lev.fanout
+        return n
+
+    def level_faults(self, l: int, cfg: Optional[FaultConfig]) -> LinkFaults:
+        """Effective fault rates at level ``l``: the ``FaultConfig``'s
+        per-level override wins, then the level's attached default, then the
+        config's global rates (all-zero without a config)."""
+        lev = self.levels[l]
+        if cfg is not None and (cfg.has_override(lev.name)
+                                or lev.faults is None):
+            return cfg.link_faults(lev.name)
+        if lev.faults is not None:
+            return lev.faults
+        return LinkFaults()
 
     def level_index(self, name: str) -> int:
         for i, lev in enumerate(self.levels):
@@ -108,6 +132,30 @@ class TreeTopology:
         lat_s, bw_s = self.ring_parts_s(l, nbytes)
         return stream_pipeline_s(lat_s, prof.pack_s(nbytes), bw_s,
                                  prof.unpack_s(nbytes), n_tiles)
+
+    def level_degraded_time_s(self, l: int, nbytes: float,
+                              cfg: FaultConfig, codec: bool = True,
+                              profile: CodecProfile = None) -> float:
+        """Modeled completion time of level ``l`` under faults.
+
+        The level finishes at the order statistic of the straggler max over
+        its children, capped by the per-level deadline — NOT the mean child
+        time (one straggler in 25 children moves the max far more than the
+        average).  Lost attempts inflate the base time by the expected
+        transmission count plus the expected first backoff.
+        """
+        lev = self.levels[l]
+        base = self.level_serial_time_s(l, nbytes, codec=codec,
+                                        profile=profile)
+        lf = self.level_faults(l, cfg)
+        e_tx = cfg.expected_transmissions(lf.loss_rate)
+        base = base * e_tx + cfg.backoff_s * (e_tx - 1.0)
+        if lf.delay_rate > 0:
+            base += lf.delay_rate * lf.delay_s
+        return straggler_level_time_s(base, cfg.straggler_rate,
+                                      cfg.straggler_sigma,
+                                      self.n_children(l),
+                                      cfg.level_deadline_s(lev.name))
 
     # -- depth-2 bridge ------------------------------------------------------
     @classmethod

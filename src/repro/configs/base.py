@@ -11,6 +11,8 @@ import dataclasses
 from dataclasses import dataclass, field, replace
 from typing import Optional, Sequence, Tuple
 
+from repro.faults.model import FaultConfig
+
 # ---------------------------------------------------------------------------
 # Layer kinds used by the interleave schedule (jamba, llama4 iRoPE, ...)
 # ---------------------------------------------------------------------------
@@ -279,6 +281,11 @@ class SyncConfig:
     # streaming codec pipeline (repro.comm.topology): per-tile pack/send/
     # unpack overlap in the simulated round time.  0 = monolithic serial.
     stream_tile_bytes: int = 1 << 20
+    # fault injection (repro.faults): availability / straggler / lossy-link
+    # processes and per-level deadlines for degraded rounds.  None (or a
+    # config with all rates 0 and deadline inf) keeps every sync path
+    # bit-identical to the faultless code.
+    faults: Optional[FaultConfig] = None
 
 
 @dataclass(frozen=True)

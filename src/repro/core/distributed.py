@@ -271,9 +271,56 @@ def _level_key(key, l: int, n_levels: int):
     return key if dist == 0 else jax.random.fold_in(key, dist)
 
 
+def _survivor_masks(survivors, levels):
+    """Normalize per-level survivor masks (None = everyone made the round).
+
+    ``survivors[l]`` masks level l's *children* (the training leaves for
+    l=0, the level-(l-1) aggregators above that); entries > 0 participated.
+    Returns a list of float32 arrays or Nones, one per level.
+    """
+    if survivors is None:
+        return [None] * len(levels)
+    survivors = tuple(survivors)
+    if len(survivors) != len(levels):
+        raise ValueError(f"{len(survivors)} survivor masks for "
+                         f"{len(levels)} cascade levels")
+    n = 1
+    for lev in levels:
+        n *= lev.fanout
+    out = []
+    for l, (m, lev) in enumerate(zip(survivors, levels)):
+        if m is None:
+            out.append(None)
+        else:
+            m = jnp.asarray(m, jnp.float32)
+            if m.shape != (n,):
+                raise ValueError(
+                    f"level {lev.name!r}: survivor mask shape {m.shape}, "
+                    f"expected ({n},)")
+            out.append(m)
+        n //= lev.fanout
+    return out
+
+
+def _survivor_weights(m, f: int):
+    """Mean-preserving reweighting for a masked mean over ``f`` children.
+
+    ``jnp.mean(d * w)`` over the child axis equals the mean over survivors
+    only: ``w = m * (f / max(sum(m), 1))``.  With an all-ones mask ``w`` is
+    *exactly* 1.0 (f/f), so the weighted mean lowers to the identical XLA op
+    as the unmasked one — the bit-identity guarantee the zero-fault path
+    rides on.  A group with zero survivors gets w == 0 everywhere: its
+    anchor takes no step this round (EF21 state carried, not corrupted).
+    """
+    if m.ndim == 1:
+        return m * (f / jnp.maximum(jnp.sum(m), 1.0))
+    return m * (f / jnp.maximum(jnp.sum(m, axis=1, keepdims=True), 1.0))
+
+
 def tree_param_sync(key, params_g, state: TreeSyncState,
                     levels: Sequence[CascadeLevel],
-                    bucket_size: Optional[int] = None):
+                    bucket_size: Optional[int] = None,
+                    survivors=None):
     """Multi-level anchor cascade (Cohort-Squeeze beyond two levels).
 
     params_g: pytree with leading leaf axis G = prod(fanout_l) — one training
@@ -298,6 +345,15 @@ def tree_param_sync(key, params_g, state: TreeSyncState,
     Like ``efbv_sync`` the tree is bucket-fused by default; ``bucket_size=0``
     or any sharding-safe ``flatten=False`` level compressor selects the
     per-leaf path.  Returns (new params_g, new TreeSyncState).
+
+    ``survivors`` (optional, from ``FaultModel.round_plan``) is one mask per
+    level over that level's children; non-survivors are excluded from the
+    anchor update via a mean-preserving reweighting (``_survivor_weights``)
+    and dropped *leaves* skip the top-down adoption — they keep their local
+    params and re-anchor on their next surviving round, so their EF21 state
+    is carried, never corrupted.  ``survivors=None`` (or all-ones masks) is
+    bit-identical to the faultless path; the aggregator down-path is modeled
+    reliable, so inner anchors always adopt.
     """
     from repro.comm import buckets as bk
 
@@ -327,6 +383,7 @@ def tree_param_sync(key, params_g, state: TreeSyncState,
                            == (lev.period - 1)).astype(jnp.int32)
 
     fused = bool(bucket_size) and all(lev.compressor.flatten for lev in levels)
+    masks = _survivor_masks(survivors, levels)
 
     # gate the whole sync (including the fused path's bucketize/debucketize
     # round-trip) behind the step test, so off-period steps stay free like
@@ -336,8 +393,8 @@ def tree_param_sync(key, params_g, state: TreeSyncState,
         st = TreeSyncState(anchors=anchors, step=state.step)
         if fused:
             return _tree_sync_fused(key, params_g, st, levels, bucket_size,
-                                    n_sync)
-        return _tree_sync_leaves(key, params_g, st, levels, n_sync)
+                                    n_sync, masks)
+        return _tree_sync_leaves(key, params_g, st, levels, n_sync, masks)
 
     def no_sync(args):
         params_g, anchors, _ = args
@@ -348,10 +405,12 @@ def tree_param_sync(key, params_g, state: TreeSyncState,
     return new_p, TreeSyncState(anchors=new_anchors, step=state.step + 1)
 
 
-def _tree_sync_fused(key, params_g, state, levels, bucket_size, n_sync):
+def _tree_sync_fused(key, params_g, state, levels, bucket_size, n_sync,
+                     masks=None):
     from repro.comm import buckets as bk
 
     L = len(levels)
+    masks = masks or [None] * L
     p_b, layout = bk.bucketize_groups(params_g, bucket_size)     # (G, nb, B)
     G = p_b.shape[0]
     anchors_b = []
@@ -364,19 +423,25 @@ def _tree_sync_fused(key, params_g, state, levels, bucket_size, n_sync):
 
     def level_sync(l, child_b, parent_b):
         lev = levels[l]
+        m = masks[l]
         with annotate(f"sync/level/{lev.name}"):
             keys = jax.random.split(_level_key(key, l, L), child_b.shape[0])
             if parent_b.ndim == 2:                  # root: unstacked anchor
                 d_i = _fused_compress(lev.compressor, keys,
                                       child_b - parent_b, layout.d)
+                if m is not None:
+                    d_i = d_i * _survivor_weights(m, d_i.shape[0])[:, None, None]
                 return parent_b + lev.lam * jnp.mean(d_i, axis=0)
             n_par = parent_b.shape[0]
             f = child_b.shape[0] // n_par
             d_i = _fused_compress(lev.compressor, keys,
                                   child_b - jnp.repeat(parent_b, f, axis=0),
                                   layout.d)
-            return parent_b + lev.lam * jnp.mean(
-                d_i.reshape((n_par, f) + d_i.shape[1:]), axis=1)
+            d_g = d_i.reshape((n_par, f) + d_i.shape[1:])
+            if m is not None:
+                w = _survivor_weights(m.reshape(n_par, f), f)
+                d_g = d_g * w[:, :, None, None]
+            return parent_b + lev.lam * jnp.mean(d_g, axis=1)
 
     def make_branch(j):
         def branch(args):
@@ -391,8 +456,17 @@ def _tree_sync_fused(key, params_g, state, levels, bucket_size, n_sync):
                 top_s = top if top.ndim == 3 else top[None]
                 for l in range(j - 1):
                     reps = anchors[l].shape[0] // top_s.shape[0]
-                    anchors[l] = jnp.repeat(top_s, reps, axis=0)
+                    adopted = jnp.repeat(top_s, reps, axis=0)
+                    if masks[l + 1] is not None:
+                        # groups whose uplink was dead carry their EF21
+                        # anchor instead of adopting the ancestor
+                        adopted = jnp.where(masks[l + 1][:, None, None] > 0,
+                                            adopted, anchors[l])
+                    anchors[l] = adopted
                 p_out = jnp.repeat(top_s, G // top_s.shape[0], axis=0)
+                if masks[0] is not None:
+                    # dropped leaves keep their local params this round
+                    p_out = jnp.where(masks[0][:, None, None] > 0, p_out, p_b)
             else:
                 p_out = p_b
             return p_out, tuple(anchors)
@@ -408,14 +482,19 @@ def _tree_sync_fused(key, params_g, state, levels, bucket_size, n_sync):
     return bk.debucketize_groups(p_out, layout), new_anchors
 
 
-def _tree_sync_leaves(key, params_g, state, levels, n_sync):
+def _tree_sync_leaves(key, params_g, state, levels, n_sync, masks=None):
     """Per-leaf cascade (one compressor kernel per pytree leaf per level)."""
     L = len(levels)
+    masks = masks or [None] * L
     leaves, treedef = jax.tree_util.tree_flatten(params_g)
     anchors_lv = [tuple(treedef.flatten_up_to(a)) for a in state.anchors]
 
+    def _wcol(w, ndim):
+        return w.reshape(w.shape + (1,) * (ndim - w.ndim))
+
     def level_sync(l, li, child, parent):
         lev = levels[l]
+        m = masks[l]
         with annotate(f"sync/level/{lev.name}"):
             keys = jax.random.split(
                 jax.random.fold_in(_level_key(key, l, L), li), child.shape[0])
@@ -425,10 +504,16 @@ def _tree_sync_leaves(key, params_g, state, levels, n_sync):
                 f = child.shape[0] // n_par
                 delta = delta - jnp.repeat(parent, f, axis=0)
                 d_i = jax.vmap(lambda k, v: lev.compressor(k, v))(keys, delta)
-                return parent + lev.lam * jnp.mean(
-                    d_i.reshape((n_par, f) + d_i.shape[1:]), axis=1)
+                d_g = d_i.reshape((n_par, f) + d_i.shape[1:])
+                if m is not None:
+                    w = _survivor_weights(m.reshape(n_par, f), f)
+                    d_g = d_g * _wcol(w, d_g.ndim)
+                return parent + lev.lam * jnp.mean(d_g, axis=1)
             d_i = jax.vmap(lambda k, v: lev.compressor(k, v))(keys,
                                                               delta - parent)
+            if m is not None:
+                d_i = d_i * _wcol(_survivor_weights(m, d_i.shape[0]),
+                                  d_i.ndim)
             return parent + lev.lam * jnp.mean(d_i, axis=0)
 
     def make_branch(j):
@@ -447,11 +532,22 @@ def _tree_sync_leaves(key, params_g, state, levels, n_sync):
                     top_s = top if top.ndim == p.ndim else top[None]
                     for l in range(j - 1):
                         reps = anchors[l][li].shape[0] // top_s.shape[0]
-                        anchors[l][li] = jnp.repeat(top_s, reps, axis=0)
-                    new_leaves[li] = jnp.repeat(
+                        adopted_a = jnp.repeat(top_s, reps, axis=0)
+                        if masks[l + 1] is not None:
+                            # dead-uplink groups carry their EF21 anchor
+                            adopted_a = jnp.where(
+                                _wcol(masks[l + 1], adopted_a.ndim) > 0,
+                                adopted_a, anchors[l][li])
+                        anchors[l][li] = adopted_a
+                    adopted = jnp.repeat(
                         top_s.astype(p.dtype), p.shape[0] // top_s.shape[0],
                         axis=0) if top_s.shape[0] > 1 else jnp.broadcast_to(
                             top_s[0].astype(p.dtype)[None], p.shape)
+                    if masks[0] is not None:
+                        # dropped leaves keep their local params this round
+                        adopted = jnp.where(
+                            _wcol(masks[0], p.ndim) > 0, adopted, p)
+                    new_leaves[li] = adopted
             return tuple(new_leaves), tuple(tuple(a) for a in anchors)
         return branch
 
@@ -464,7 +560,8 @@ def _tree_sync_leaves(key, params_g, state, levels, n_sync):
 
 
 def hier_param_sync(key, params_g, state: SyncState, c: Compressor, lam: float,
-                    period: int, bucket_size: Optional[int] = None):
+                    period: int, bucket_size: Optional[int] = None,
+                    survivors=None):
     """Cohort-Squeeze / local training on the fabric (param-level EF21 sync).
 
     params_g: pytree with leading group axis (pods, or (pod x data) worker
@@ -489,8 +586,10 @@ def hier_param_sync(key, params_g, state: SyncState, c: Compressor, lam: float,
     G = jax.tree_util.tree_leaves(params_g)[0].shape[0]
     lev = CascadeLevel("inter", c, lam, int(period), G)
     tstate = TreeSyncState(anchors=(state.h_bar,), step=state.step)
+    if survivors is not None and not isinstance(survivors, (tuple, list)):
+        survivors = (survivors,)  # single group-axis mask
     new_p, ts = tree_param_sync(key, params_g, tstate, (lev,),
-                                bucket_size=bucket_size)
+                                bucket_size=bucket_size, survivors=survivors)
     return new_p, SyncState(h=state.h, h_bar=ts.anchors[0], step=ts.step)
 
 

@@ -1,0 +1,39 @@
+"""repro.faults — deterministic fault injection and graceful degradation.
+
+Counter-PRNG fault model (availability, stragglers, per-link drop/corrupt/
+delay, per-level deadlines) plus the lossy-link transmit simulation with
+checksummed retries.  Any round replays bit-exactly from ``(seed, round)``.
+"""
+from repro.faults.model import (
+    FaultConfig,
+    FaultModel,
+    LevelFaults,
+    LevelPlan,
+    LinkFaults,
+    RoundFaultPlan,
+    counter_normal,
+    counter_uniform,
+)
+from repro.faults.transmit import (
+    RETRY_TAG,
+    TransmitResult,
+    corrupt_payload,
+    expected_transmissions,
+    transmit,
+)
+
+__all__ = [
+    "FaultConfig",
+    "FaultModel",
+    "LevelFaults",
+    "LevelPlan",
+    "LinkFaults",
+    "RoundFaultPlan",
+    "counter_normal",
+    "counter_uniform",
+    "RETRY_TAG",
+    "TransmitResult",
+    "corrupt_payload",
+    "expected_transmissions",
+    "transmit",
+]

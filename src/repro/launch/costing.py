@@ -137,7 +137,7 @@ def corrected_costs(arch_cfg: ModelConfig, mesh, shape_name: str,
 
 
 def comm_time_model(measures: Dict[str, float], topology=None,
-                    tile_bytes: int = 0) -> Dict[str, float]:
+                    tile_bytes: int = 0, faults=None) -> Dict[str, float]:
     """Bandwidth-bound collective wall-clock from the corrected per-device bytes.
 
     Splits the HLO-derived collective traffic onto the link topology: the
@@ -157,6 +157,12 @@ def comm_time_model(measures: Dict[str, float], topology=None,
     hierarchical schedule streamed per tile, so each hop's transfer of tile
     k+1 overlaps the next hop's transfer of tile k (repro.comm.topology's
     pipelined model); serial t_comm_s stays the sum.
+
+    With ``faults`` (a ``repro.faults.FaultConfig``) the report adds
+    ``t_comm_degraded_s``: each hop's time inflated by the expected
+    retransmission count and finished at the *order statistic* of the
+    straggler max over that hop's children — capped by the per-level
+    deadline — not the mean child time.
     """
     from repro.comm.topology import get_topology, pipelined_time_s
     from repro.comm.tree import TreeTopology
@@ -186,6 +192,27 @@ def comm_time_model(measures: Dict[str, float], topology=None,
         n_tiles = max(1, -(-int(total) // int(tile_bytes)))
         out["t_comm_stream_s"] = pipelined_time_s(tuple(stages), n_tiles)
         out["stream_tile_bytes"] = int(tile_bytes)
+    if faults is not None and faults.enabled():
+        from repro.comm.topology import straggler_level_time_s
+
+        if isinstance(topo, TreeTopology):
+            hops = [(lev.name, topo.level_faults(l, faults),
+                     topo.n_children(l), t)
+                    for l, (lev, t) in enumerate(zip(topo.levels, stages))]
+        else:
+            hops = [("intra", faults.link_faults("intra"),
+                     topo.devices_per_pod, stages[0]),
+                    ("inter", faults.link_faults("inter"),
+                     topo.n_pods, stages[1])]
+        degraded = 0.0
+        for name, lf, n, t in hops:
+            e_tx = faults.expected_transmissions(lf.loss_rate)
+            base = (t * e_tx + faults.backoff_s * (e_tx - 1.0)
+                    + lf.delay_rate * lf.delay_s)
+            degraded += straggler_level_time_s(
+                base, faults.straggler_rate, faults.straggler_sigma, n,
+                faults.level_deadline_s(name))
+        out["t_comm_degraded_s"] = degraded
     return out
 
 

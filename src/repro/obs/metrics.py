@@ -211,6 +211,30 @@ class MetricsRegistry:
                     out[name[len("comm/ledger/"):]] = m.total
         return out
 
+    def observe_fault_plan(self, rnd: int, plan) -> None:
+        """Fault counters from a ``repro.faults.RoundFaultPlan``: drops,
+        retries, deadline misses, corruptions, unavailable clients as
+        ``faults/*`` counters, plus the per-level survivor fraction and the
+        degraded round completion time as gauges."""
+        stats = plan.stats()
+        for key in ("drops", "retries", "deadline_misses", "corrupt",
+                    "unavailable"):
+            self.counter(f"faults/{key}").inc(stats.get(key, 0.0), step=rnd)
+        for lv in plan.levels:
+            self.gauge(f"faults/survivor_frac/{lv.name}").set(
+                lv.survivor_frac, step=rnd)
+        self.gauge("faults/round_time_s").set(stats["time_s"], step=rnd)
+
+    def fault_stats(self) -> Dict[str, float]:
+        """The ``faults/*`` totals/values (empty when no faults observed)."""
+        out = {}
+        with self._lock:
+            for name, m in self._metrics.items():
+                if name.startswith("faults/"):
+                    out[name[len("faults/"):]] = (
+                        m.total if isinstance(m, Counter) else m.value)
+        return out
+
     def observe_train_step(self, step: int, metrics: Dict[str, float]) -> None:
         """Loss/grad-norm (host-fetched floats) next to the byte series."""
         for k, v in metrics.items():

@@ -14,6 +14,11 @@ This module joins them with ``repro.comm.round_cost``'s *model* of the same
 round: per phase, measured wall-time next to the ``serial_time_s`` /
 ``pipelined_time_s`` prediction with a ``model_error%`` column, and a
 per-level audit that the bytes the trace saw match the ledger exactly.
+Ledger tags with no trace counterpart (``retry``: a re-sent payload is one
+encode but several wire messages) are displayed but excluded from the match
+verdict.  When the metrics JSON carries ``faults/*`` series (fault-injected
+runs), a degraded-rounds section reports drops, retries, deadline misses and
+the per-level survivor fraction.
 
 CLI::
 
@@ -33,6 +38,10 @@ from typing import Dict, List, Optional, Tuple
 from repro.obs.trace import Span, load_jsonl
 
 PHASES = ("pack", "encode", "allreduce", "decode", "adopt")
+
+# ledger tags that have no encode-span counterpart in the trace: shown in the
+# byte audit but exempt from the exact-match requirement
+UNTRACED_TAGS = frozenset({"retry"})
 
 # span-name prefixes -> canonical round phase
 _PHASE_PREFIXES = (
@@ -160,6 +169,21 @@ def modeled_phase_seconds(sync, n_params: int,
     return phases, level_bytes
 
 
+def _fault_stats_from_metrics(mdoc: dict) -> Dict[str, float]:
+    """``faults/*`` totals from a metrics JSON — either the ``fault_stats``
+    extra a bench exports, or the raw metric entries from a traced run."""
+    fs = mdoc.get("fault_stats")
+    if fs:
+        return {str(k): float(v) for k, v in fs.items()}
+    out: Dict[str, float] = {}
+    for m in mdoc.get("metrics", []):
+        name = str(m.get("name", ""))
+        if name.startswith("faults/"):
+            out[name[len("faults/"):]] = float(
+                m.get("total", m.get("value", 0.0)) or 0.0)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # report assembly
 # ---------------------------------------------------------------------------
@@ -203,12 +227,14 @@ def build_report(trace_path: str, metrics_path: Optional[str] = None,
         pipelined_s = cost.time_s * n_rounds
 
     ledger_bytes: Optional[Dict[str, float]] = None
+    fault_stats: Dict[str, float] = {}
     if metrics_path:
         with open(metrics_path) as f:
             mdoc = json.load(f)
         lb = mdoc.get("ledger_bytes_by_tag")
         if lb:
             ledger_bytes = {str(k): float(v) for k, v in lb.items()}
+        fault_stats = _fault_stats_from_metrics(mdoc)
 
     lines = []
     title = meta.get("label") or trace_path
@@ -248,6 +274,13 @@ def build_report(trace_path: str, metrics_path: Optional[str] = None,
         for lvl in levels:
             tb = trace_bytes.get(lvl)
             lb = (ledger_bytes or {}).get(lvl)
+            if lvl in UNTRACED_TAGS:
+                lines.append(
+                    f"  {lvl:<10} "
+                    f"{int(tb) if tb is not None else '—':>12} "
+                    f"{int(lb) if lb is not None else '—':>12} "
+                    f"{'—':>6}")
+                continue
             ok = (tb is not None and lb is not None
                   and int(round(tb)) == int(round(lb)))
             if ledger_bytes is not None and not ok:
@@ -261,12 +294,31 @@ def build_report(trace_path: str, metrics_path: Optional[str] = None,
             lines.append(f"  per-level measured bytes match CommLedger: "
                          f"{bytes_match}")
 
+    if fault_stats:
+        lines.append("")
+        lines.append("  degraded rounds (fault injection):")
+        counters = [(k, fault_stats[k]) for k in
+                    ("drops", "retries", "deadline_misses", "corrupt",
+                     "unavailable") if k in fault_stats]
+        if counters:
+            lines.append("    " + "  ".join(f"{k}={int(round(v))}"
+                                            for k, v in counters))
+        fracs = {k[len("survivor_frac/"):]: v for k, v in fault_stats.items()
+                 if k.startswith("survivor_frac/")}
+        if fracs:
+            lines.append("    survivor_frac  " + "  ".join(
+                f"{lvl}={v:.3f}" for lvl, v in sorted(fracs.items())))
+        if "round_time_s" in fault_stats:
+            lines.append(f"    degraded round_time="
+                         f"{fault_stats['round_time_s'] * 1e3:.3f} ms")
+
     result = {
         "measured_s": measured, "modeled_s": modeled,
         "measured_total_s": measured_total,
         "serial_model_s": serial_s, "pipelined_model_s": pipelined_s,
         "trace_bytes": trace_bytes, "ledger_bytes": ledger_bytes,
         "bytes_match": bytes_match, "n_spans": len(spans),
+        "fault_stats": fault_stats or None,
     }
     return "\n".join(lines) + "\n", result
 

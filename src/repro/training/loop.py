@@ -18,6 +18,38 @@ from repro.utils.logging import get_logger, log_kv
 log = get_logger("train")
 
 
+def _fault_model(tc: TrainConfig, n_groups: int, n_pods: int):
+    """FaultModel bound to the sync cascade, or None (faults off / dense).
+
+    Tree hier mode binds to the configured tree topology; flat hier/local
+    binds to the depth-1 tree whose single ``inter`` level fans every replica
+    group into the server, so the survivor mask is one per-group vector.
+    """
+    faults = getattr(tc.sync, "faults", None)
+    if faults is None or not faults.enabled():
+        return None
+    if tc.sync.mode not in ("hier", "local"):
+        return None
+    from repro.faults import FaultModel
+
+    if tc.sync.mode == "hier" and tc.sync.levels:
+        from repro.comm.tree import get_tree_topology
+
+        tree = get_tree_topology(tc.sync.topology)
+    else:
+        from repro.comm.topology import Link, get_topology
+        from repro.comm.tree import TreeLevel, TreeTopology
+
+        G = n_pods if tc.sync.mode == "hier" else n_groups
+        try:
+            link = get_topology(tc.sync.topology).inter
+        except Exception:
+            link = Link(gbps=1.0, latency_us=1000.0)
+        tree = TreeTopology(f"{tc.sync.topology}-flat",
+                            (TreeLevel("inter", G, link),))
+    return FaultModel(faults, tree)
+
+
 def train(cfg: ModelConfig, tc: TrainConfig, batches: Iterator[dict],
           n_groups: int = 1, n_pods: int = 1, steps: Optional[int] = None,
           ckpt_path: Optional[str] = None, log_every: int = 10):
@@ -56,6 +88,12 @@ def train(cfg: ModelConfig, tc: TrainConfig, batches: Iterator[dict],
 
             registry.observe_round_cost(0, cost)
 
+    fault_model = _fault_model(tc, n_groups, n_pods)
+    if fault_model is not None:
+        log.info("fault injection on (seed=%d): degraded rounds aggregate "
+                 "over deadline survivors; replayable from (seed, round)",
+                 tc.sync.faults.seed)
+
     history = []
     t0 = time.time()
     for step in range(steps):
@@ -71,7 +109,18 @@ def train(cfg: ModelConfig, tc: TrainConfig, batches: Iterator[dict],
             for k, v in batch.items():
                 if k != "tokens":
                     model_batch[k] = jnp.asarray(v)
-            state, metrics = step_fn(state, model_batch)
+            if fault_model is None:
+                state, metrics = step_fn(state, model_batch)
+            else:
+                # deterministic per-round fault plan; dropped children sync
+                # with zero weight and keep their local params this round
+                plan = fault_model.round_plan(step)
+                masks = tuple(jnp.asarray(m) for m in plan.survivor_masks())
+                state, metrics = step_fn(state, model_batch, masks)
+        if fault_model is not None and tracing:
+            from repro.obs import registry
+
+            registry.observe_fault_plan(step, plan)
         # metrics stay on device (async dispatch): one jax.device_get per log
         # point instead of a blocking float(v) transfer per metric per step
         history.append(metrics)

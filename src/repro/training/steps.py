@@ -161,7 +161,9 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_groups: int, n_pods: in
     G_rep = (_cascade_leaves(cascade) if cascade
              else (n_pods if mode == "hier" else n_groups))
 
-    def local_step(state: TrainState, batch):
+    # survivors: optional per-level float masks from a faults.RoundFaultPlan
+    # (sync.faults) — None keeps the exact legacy all-participants sync
+    def local_step(state: TrainState, batch, survivors=None):
         key, sub = jax.random.split(state.key)
         gbatch = _split_groups(batch, G_rep)
 
@@ -178,11 +180,12 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_groups: int, n_pods: in
             if cascade:
                 params_g, sync_state = dist.tree_param_sync(
                     sub, params_g, state.sync_state, cascade,
-                    bucket_size=sync.bucket_size)
+                    bucket_size=sync.bucket_size, survivors=survivors)
             else:
                 params_g, sync_state = dist.hier_param_sync(
                     sub, params_g, state.sync_state, compressor, lam,
-                    sync.sync_period, bucket_size=sync.bucket_size)
+                    sync.sync_period, bucket_size=sync.bucket_size,
+                    survivors=survivors)
         metrics = {"loss": jnp.mean(loss_g), "ce": jnp.mean(loss_g),
                    "grad_norm": jnp.mean(gnorm_g)}
         return TrainState(params_g, opt_state, sync_state, key), metrics

@@ -1,0 +1,456 @@
+"""Fault injection (repro.faults): counter PRNG, degraded aggregation,
+wire integrity, retry accounting, and the fault-aware round-time model."""
+import dataclasses
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (Link, PayloadError, TreeLevel, TreeTopology, decode,
+                        encode, get_tree_topology, round_cost, round_ledger,
+                        seal_payload, verify_payload)
+from repro.comm.ledger import CommLedger
+from repro.comm.topology import (deadline_survivor_frac, norm_ppf,
+                                 straggler_level_time_s)
+from repro.configs.base import LevelConfig, SyncConfig
+from repro.core import compressors as C
+from repro.core import distributed as dist
+from repro.faults import (FaultConfig, FaultModel, LevelFaults, LinkFaults,
+                          RETRY_TAG, corrupt_payload, counter_normal,
+                          counter_uniform, expected_transmissions, transmit)
+
+
+# ---------------------------------------------------------------------------
+# counter PRNG
+# ---------------------------------------------------------------------------
+class TestCounterPRNG:
+    def test_deterministic_and_addressable(self):
+        a = counter_uniform(3, 7, "uplink/xmit", 16)
+        b = counter_uniform(3, 7, "uplink/xmit", 16)
+        np.testing.assert_array_equal(a, b)
+        # lanes address into the same stream: [lane..lane+n) slices agree
+        c = counter_uniform(3, 7, "uplink/xmit", 8, lane=8)
+        np.testing.assert_array_equal(a[8:], c)
+
+    def test_decorrelated_across_streams_rounds_seeds(self):
+        base = counter_uniform(3, 7, "s", 256)
+        for other in (counter_uniform(3, 8, "s", 256),
+                      counter_uniform(4, 7, "s", 256),
+                      counter_uniform(3, 7, "t", 256)):
+            assert not np.array_equal(base, other)
+            assert abs(np.corrcoef(base, other)[0, 1]) < 0.2
+
+    def test_range_and_moments(self):
+        u = counter_uniform(0, 0, "u", 20_000)
+        assert (u >= 0).all() and (u < 1).all()
+        assert abs(u.mean() - 0.5) < 0.02
+        z = counter_normal(0, 0, "z", 20_000)
+        assert abs(z.mean()) < 0.03 and abs(z.std() - 1.0) < 0.03
+
+
+# ---------------------------------------------------------------------------
+# config + model
+# ---------------------------------------------------------------------------
+class TestFaultConfig:
+    def test_default_is_disabled(self):
+        assert not FaultConfig().enabled()
+        assert FaultConfig(straggler_rate=0.5, straggler_sigma=0.0).enabled() \
+            is False
+
+    def test_enabled_by_any_knob(self):
+        assert FaultConfig(availability=0.9).enabled()
+        assert FaultConfig(drop_rate=0.1).enabled()
+        assert FaultConfig(deadline_s=5.0).enabled()
+        assert FaultConfig(levels=(LevelFaults("wan", drop_rate=0.1),)) \
+            .enabled()
+
+    def test_override_precedence(self):
+        cfg = FaultConfig(drop_rate=0.1,
+                          levels=(LevelFaults("wan", drop_rate=0.4),))
+        assert cfg.link_faults("wan").drop_rate == 0.4
+        assert cfg.link_faults("uplink").drop_rate == 0.1
+        tree = get_tree_topology("edge_fl_tree")
+        assert tree.level_faults(2, cfg).drop_rate == 0.4  # wan override
+        assert tree.level_faults(0, cfg).drop_rate == 0.1  # global default
+
+    def test_expected_transmissions(self):
+        cfg = FaultConfig(max_retries=2)
+        assert cfg.expected_transmissions(0.0) == 1.0
+        q = 0.25
+        assert cfg.expected_transmissions(q) == pytest.approx(1 + q + q * q)
+        assert expected_transmissions(q, 2) == cfg.expected_transmissions(q)
+
+
+class TestFaultModel:
+    def _model(self, **kw):
+        return FaultModel(FaultConfig(**kw), get_tree_topology("edge_fl_tree"))
+
+    def test_replay_bit_exact(self):
+        kw = dict(seed=11, availability=0.8, drop_rate=0.1,
+                  straggler_rate=0.3, deadline_s=30.0)
+        p1 = self._model(**kw).round_plan(5)
+        p2 = self._model(**kw).round_plan(5)
+        for a, b in zip(p1.levels, p2.levels):
+            np.testing.assert_array_equal(a.survivors, b.survivors)
+            np.testing.assert_array_equal(a.arrival_s, b.arrival_s)
+        assert p1.stats() == p2.stats()
+
+    def test_mask_shapes_follow_fanouts(self):
+        plan = self._model(seed=1, availability=0.9).round_plan(0)
+        assert [m.shape[0] for m in plan.survivor_masks()] == [100, 20, 4]
+
+    def test_dead_subtrees_propagate_up(self):
+        fm = self._model(seed=2, availability=0.0)  # nobody checks in
+        plan = fm.round_plan(0)
+        for lv in plan.levels:
+            assert not lv.survivors.any()
+
+    def test_availability_rate(self):
+        fm = self._model(seed=3, availability=0.7)
+        frac = np.mean([fm.available(t).mean() for t in range(200)])
+        assert abs(frac - 0.7) < 0.03
+
+
+# ---------------------------------------------------------------------------
+# degraded aggregation
+# ---------------------------------------------------------------------------
+def _cascade(comp=None):
+    comp = comp or C.identity()
+    return (dist.CascadeLevel("cell", comp, 1.0, 1, 4),
+            dist.CascadeLevel("cloud", comp, 1.0, 1, 3))
+
+
+def _consensus(G=12, d=16):
+    key = jax.random.PRNGKey(0)
+    targets = jax.random.normal(key, (G, d))
+    return key, targets, jnp.mean(targets, axis=0)
+
+
+class TestDegradedSync:
+    @pytest.mark.parametrize("bucket_size", [None, 0])  # fused / per-leaf
+    def test_all_ones_masks_bit_identical(self, bucket_size):
+        levels = _cascade(C.top_k(0.5))
+        key, targets, _ = _consensus()
+        params = {"w": targets}
+        st0 = dist.tree_sync_state_init({"w": jnp.zeros((16,))}, levels)
+        ones = (jnp.ones((12,)), jnp.ones((3,)))
+        p_a, st_a = dist.tree_param_sync(key, params, st0, levels,
+                                         bucket_size=bucket_size)
+        p_b, st_b = dist.tree_param_sync(key, params, st0, levels,
+                                         bucket_size=bucket_size,
+                                         survivors=ones)
+        np.testing.assert_array_equal(np.asarray(p_a["w"]),
+                                      np.asarray(p_b["w"]))
+        for a, b in zip(st_a.anchors, st_b.anchors):
+            np.testing.assert_array_equal(np.asarray(a["w"]),
+                                          np.asarray(b["w"]))
+
+    def test_none_masks_allowed_per_level(self):
+        levels = _cascade()
+        key, targets, _ = _consensus()
+        st0 = dist.tree_sync_state_init({"w": jnp.zeros((16,))}, levels)
+        p_a, _ = dist.tree_param_sync(key, {"w": targets}, st0, levels)
+        p_b, _ = dist.tree_param_sync(key, {"w": targets}, st0, levels,
+                                      survivors=(None, None))
+        np.testing.assert_array_equal(np.asarray(p_a["w"]),
+                                      np.asarray(p_b["w"]))
+
+    def test_bad_mask_shape_raises(self):
+        levels = _cascade()
+        st0 = dist.tree_sync_state_init({"w": jnp.zeros((16,))}, levels)
+        with pytest.raises(ValueError, match="survivor mask shape"):
+            dist.tree_param_sync(jax.random.PRNGKey(0),
+                                 {"w": jnp.zeros((12, 16))}, st0, levels,
+                                 survivors=(jnp.ones((4,)), jnp.ones((3,))))
+
+    def test_dropped_leaf_keeps_local_params(self):
+        levels = _cascade()
+        key, targets, _ = _consensus()
+        st0 = dist.tree_sync_state_init({"w": jnp.zeros((16,))}, levels)
+        mask = jnp.ones((12,)).at[5].set(0.0)
+        p, _ = dist.tree_param_sync(key, {"w": targets}, st0, levels,
+                                    survivors=(mask, jnp.ones((3,))))
+        # dropped leaf skips adoption; survivors adopt their (shared) anchor
+        np.testing.assert_array_equal(np.asarray(p["w"][5]),
+                                      np.asarray(targets[5]))
+        assert not np.array_equal(np.asarray(p["w"][4]),
+                                  np.asarray(targets[4]))
+
+    def test_drop_then_restore_preserves_contraction(self):
+        """EF21 contraction survives a transient dropout: the root-anchor
+        consensus error never increases round-over-round on the synthetic
+        quadratic (the dropped leaf itself transiently drifts — by design it
+        keeps its local step — but re-anchors once restored)."""
+        levels = _cascade()
+        key, targets, center = _consensus()
+        lr = 0.5
+        params = {"w": jnp.zeros((12, 16))}
+        st = dist.tree_sync_state_init({"w": jnp.zeros((16,))}, levels)
+        drop_round, root_errs, leaf_errs = 2, [], []
+        for t in range(8):
+            w = params["w"] - lr * (params["w"] - targets)
+            if t == drop_round:
+                surv = (jnp.ones((12,)).at[0].set(0.0), jnp.ones((3,)))
+            else:
+                surv = None
+            params, st = dist.tree_param_sync(jax.random.fold_in(key, t),
+                                              {"w": w}, st, levels,
+                                              survivors=surv)
+            root_errs.append(float(
+                jnp.linalg.norm(st.anchors[-1]["w"] - center)))
+            leaf_errs.append(float(jnp.max(
+                jnp.linalg.norm(params["w"] - center, axis=-1))))
+        assert np.isfinite(root_errs).all() and np.isfinite(leaf_errs).all()
+        # aggregate contraction is unbroken by the dropout
+        for a, b in zip(root_errs, root_errs[1:]):
+            assert b <= a * (1.0 + 1e-6), root_errs
+        # the dropped leaf drifts at the drop round, then snaps back below
+        # its pre-drop error on the very next (restored) sync
+        assert leaf_errs[drop_round] > leaf_errs[drop_round - 1]
+        assert leaf_errs[drop_round + 1] < leaf_errs[drop_round - 1]
+        assert leaf_errs[-1] < 0.2 * leaf_errs[0]
+
+    def test_zero_survivor_group_anchor_unchanged(self):
+        levels = _cascade()
+        key, targets, _ = _consensus()
+        st0 = dist.tree_sync_state_init({"w": jnp.zeros((16,))}, levels)
+        dead_cell = jnp.ones((12,)).at[:4].set(0.0)  # cell 0 fully dead
+        _, st = dist.tree_param_sync(key, {"w": targets}, st0, levels,
+                                     survivors=(dead_cell,
+                                                jnp.ones((3,)).at[0].set(0.0)))
+        # cell 0's anchor took no step (EF21 state carried, not corrupted)
+        np.testing.assert_array_equal(np.asarray(st.anchors[0]["w"][0]),
+                                      np.asarray(st0.anchors[0]["w"][0]))
+        assert not np.array_equal(np.asarray(st.anchors[0]["w"][1]),
+                                  np.asarray(st0.anchors[0]["w"][1]))
+
+    def test_local_step_survivors_wiring(self):
+        """make_train_step('local') with all-ones masks == no masks, bitwise."""
+        from repro.configs import get_config
+        from repro.configs.base import TrainConfig
+        from repro.data.synthetic import SyntheticLMDataset, lm_batch_iterator
+        from repro.models import init_params
+        from repro.training.steps import init_train_state, make_train_step
+
+        cfg = get_config("h2o-danube-1.8b").reduced()
+        tc = TrainConfig(model=cfg, seq_len=16, global_batch=4, lr=1e-3,
+                         warmup_steps=1, total_steps=2,
+                         sync=SyncConfig(mode="local", compressor="identity",
+                                         sync_period=1,
+                                         faults=FaultConfig(drop_rate=0.1)))
+        ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, length=2000, seed=0)
+        raw = next(lm_batch_iterator(ds, 4, 16, seed=1))
+        batch = {"tokens": jnp.asarray(raw["tokens"][:, :-1]),
+                 "targets": jnp.asarray(raw["tokens"][:, 1:])}
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        state = init_train_state(jax.random.PRNGKey(1), params, tc, 2, 1)
+        step = jax.jit(make_train_step(cfg, tc, 2, 1))
+        s_none, _ = step(state, batch)
+        s_ones, _ = step(state, batch, (jnp.ones((2,)),))
+        for a, b in zip(jax.tree_util.tree_leaves(s_none.params),
+                        jax.tree_util.tree_leaves(s_ones.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# wire integrity + retry
+# ---------------------------------------------------------------------------
+def _payload(d=4096, comp=None):
+    comp = comp or C.qsgd(8)
+    return encode(comp, jax.random.PRNGKey(0),
+                  jax.random.normal(jax.random.PRNGKey(1), (d,)))
+
+
+class TestWireIntegrity:
+    def test_seal_verify_roundtrip(self):
+        p = seal_payload(_payload())
+        verify_payload(p)  # no raise
+        assert decode(p) is not None
+
+    def test_corrupt_payload_rejected_with_plane_name(self):
+        p = seal_payload(_payload())
+        plane = corrupt_payload(p, rnd=0, seed=3)
+        assert plane is not None
+        with pytest.raises(PayloadError, match=plane) as ei:
+            decode(p)
+        assert ei.value.plane == plane
+
+    def test_truncated_plane_rejected_with_plane_name(self):
+        p = _payload(comp=C.top_k(0.1))
+        p.planes["indices"] = p.planes["indices"][:-2]
+        with pytest.raises(PayloadError, match="indices"):
+            decode(p)
+
+    def test_unsealed_payload_verifies_as_noop(self):
+        verify_payload(_payload())  # no checksum planes -> no-op
+
+    def test_transmit_charges_retries_to_retry_tag(self):
+        cfg = FaultConfig(seed=1, drop_rate=0.6, max_retries=3)
+        led = CommLedger()
+        p = _payload(d=512)
+        n_attempts = 0
+        for child in range(8):
+            res = transmit(p, cfg, rnd=0, level_name="uplink", n_children=8,
+                           child=child, ledger=led)
+            n_attempts += res.attempts
+        by_tag = led.bytes_by_tag()
+        assert by_tag["uplink"] == 8 * p.nbytes  # first attempts
+        assert led.retry_bytes == (n_attempts - 8) * p.nbytes
+        assert by_tag.get(RETRY_TAG, 0) == led.retry_bytes
+        assert led.retry_bytes > 0
+
+    def test_transmit_matches_fault_model_decisions(self):
+        """Wire-level transmit and plan-level FaultModel draw identically."""
+        cfg = FaultConfig(seed=9, drop_rate=0.4, max_retries=0)
+        tree = TreeTopology("t", (TreeLevel(
+            "uplink", 8, Link(gbps=1.0, latency_us=100.0)),))
+        fm = FaultModel(cfg, tree)
+        dropped, _, _ = fm.attempt_outcomes(0, 0, 0)
+        p = _payload(d=512)
+        for child in range(8):
+            res = transmit(p, cfg, rnd=0, level_name="uplink", n_children=8,
+                           child=child)
+            assert res.delivered == (not dropped[child])
+
+    def test_corrupted_transmit_retries_and_recovers(self):
+        cfg = FaultConfig(seed=4, corrupt_rate=0.5, max_retries=4)
+        p = _payload(d=512)
+        results = [transmit(p, cfg, rnd=0, level_name="uplink", n_children=16,
+                            child=i) for i in range(16)]
+        assert any(r.n_corrupt > 0 for r in results)
+        for r in results:
+            if r.delivered:
+                verify_payload(r.payload)
+
+
+# ---------------------------------------------------------------------------
+# costing: retries, order statistics, deadlines
+# ---------------------------------------------------------------------------
+def _edge_sync(faults=None):
+    return SyncConfig(mode="hier", topology="edge_fl_tree", levels=(
+        LevelConfig("uplink", 2, "top_k", 0.05),
+        LevelConfig("metro", 4, "qsgd", quant_bits=8),
+        LevelConfig("wan", 4, "top_k", 0.01)), faults=faults)
+
+
+class TestFaultCosting:
+    N = 1 << 14
+
+    def test_disabled_config_identical_to_none(self):
+        a = round_cost(_edge_sync(), self.N)
+        b = round_cost(_edge_sync(FaultConfig()), self.N)
+        assert a.total_bytes == b.total_bytes
+        assert a.time_s == b.time_s
+        assert b.retry_bytes == 0.0 and b.degraded_time_s == 0.0
+
+    def test_retry_bytes_sum_into_total(self):
+        fc = FaultConfig(drop_rate=0.2)
+        cost = round_cost(_edge_sync(fc), self.N)
+        base = round_cost(_edge_sync(), self.N)
+        assert cost.retry_bytes > 0
+        assert cost.total_bytes == pytest.approx(
+            base.total_bytes + cost.retry_bytes)
+        assert cost.total_bytes == pytest.approx(
+            cost.intra_bytes + cost.inter_bytes + cost.retry_bytes)
+
+    def test_round_ledger_emits_retry_records(self):
+        fc = FaultConfig(drop_rate=0.2)
+        led = round_ledger(_edge_sync(fc), self.N, n_rounds=4)
+        assert led.retry_bytes > 0
+        clean = round_ledger(_edge_sync(), self.N, n_rounds=4)
+        assert clean.retry_bytes == 0
+        assert led.total_bytes > clean.total_bytes
+
+    def test_degraded_time_monotone_in_deadline(self):
+        fc0 = FaultConfig(straggler_rate=0.3, straggler_sigma=1.5,
+                          drop_rate=0.1)
+        times = [round_cost(_edge_sync(dataclasses.replace(
+            fc0, deadline_s=dl)), self.N).degraded_time_s
+            for dl in (1.0, 5.0, 30.0, math.inf)]
+        for a, b in zip(times, times[1:]):
+            assert a <= b * (1.0 + 1e-9), times
+        assert times[0] < times[-1]
+
+    def test_straggler_order_statistics(self):
+        # more children -> later completion (max of more draws)
+        t_small = straggler_level_time_s(1.0, 0.3, 1.0, 4)
+        t_big = straggler_level_time_s(1.0, 0.3, 1.0, 100)
+        assert 1.0 <= t_small < t_big
+        # a deadline caps it
+        assert straggler_level_time_s(1.0, 0.3, 1.0, 100, 2.0) == 2.0
+        assert straggler_level_time_s(1.0, 0.0, 1.0, 100) == 1.0
+
+    def test_norm_ppf_and_survivor_frac(self):
+        assert norm_ppf(0.5) == pytest.approx(0.0, abs=1e-9)
+        assert norm_ppf(0.975) == pytest.approx(1.959964, abs=1e-4)
+        f = [deadline_survivor_frac(1.0, 0.4, 1.0, dl)
+             for dl in (0.5, 1.0, 3.0, math.inf)]
+        assert all(0.0 <= x <= 1.0 for x in f)
+        for a, b in zip(f, f[1:]):
+            assert a <= b + 1e-12
+        assert f[-1] == 1.0
+
+    def test_comm_time_model_degraded(self):
+        from repro.launch.costing import comm_time_model
+
+        m = {"coll_total": 1e9, "coll_interpod": 2e8}
+        out = comm_time_model(m, faults=FaultConfig(
+            straggler_rate=0.2, drop_rate=0.1, deadline_s=10.0))
+        assert out["t_comm_degraded_s"] >= out["t_comm_s"]
+        assert "t_comm_degraded_s" not in comm_time_model(m)
+        tree_out = comm_time_model(
+            m, topology=get_tree_topology("edge_fl_tree"),
+            faults=FaultConfig(straggler_rate=0.2, drop_rate=0.05))
+        assert tree_out["t_comm_degraded_s"] >= tree_out["t_comm_s"]
+
+
+# ---------------------------------------------------------------------------
+# observability
+# ---------------------------------------------------------------------------
+class TestFaultObservability:
+    def test_observe_fault_plan_and_stats(self):
+        from repro.obs.metrics import MetricsRegistry
+
+        fm = FaultModel(FaultConfig(seed=1, availability=0.8, drop_rate=0.1),
+                        get_tree_topology("edge_fl_tree"))
+        reg = MetricsRegistry()
+        for t in range(4):
+            reg.observe_fault_plan(t, fm.round_plan(t))
+        fs = reg.fault_stats()
+        assert {"drops", "retries", "deadline_misses", "corrupt",
+                "unavailable", "round_time_s"} <= set(fs)
+        assert any(k.startswith("survivor_frac/") for k in fs)
+        assert fs["unavailable"] > 0
+
+    def test_report_excludes_retry_tag_from_match(self, tmp_path):
+        from repro.obs import trace as obs_trace
+        from repro.obs.report import build_report
+
+        was = obs_trace.enabled()
+        obs_trace.enable()
+        obs_trace.get_tracer().reset()
+        with obs_trace.span("codec/encode", nbytes=100, level="uplink"):
+            pass
+        obs_trace.set_meta(label="faults_report_test", n_params=10,
+                           n_rounds=1)
+        tp = obs_trace.export_jsonl(str(tmp_path / "T.jsonl"))
+        if not was:
+            obs_trace.disable()
+
+        mp = tmp_path / "M.json"
+        doc = {"ledger_bytes_by_tag": {"uplink": 100.0, "retry": 64.0},
+               "fault_stats": {"drops": 3.0, "survivor_frac/uplink": 0.9,
+                               "round_time_s": 1.5}}
+        mp.write_text(json.dumps(doc))
+        text, res = build_report(tp, metrics_path=str(mp))
+        assert res["bytes_match"] is True  # retry tag shown but not audited
+        assert "retry" in text and "degraded rounds" in text
+        assert res["fault_stats"]["drops"] == 3.0
+
+        doc["ledger_bytes_by_tag"]["uplink"] = 228.0
+        mp.write_text(json.dumps(doc))
+        _, res2 = build_report(tp, metrics_path=str(mp))
+        assert res2["bytes_match"] is False
