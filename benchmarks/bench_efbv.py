@@ -12,13 +12,12 @@ analytic payload_bits model — the size of one encoded probe is exact for
 rand-k (fixed k), so it is measured once and recorded per round."""
 from __future__ import annotations
 
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, now_s, timed
 from repro.comm import CommLedger, encode
 from repro.core import compressors as C
 from repro.core.ef_bv import efbv_gd, efbv_init, efbv_params
@@ -58,10 +57,10 @@ def run():
             lam, nu = efbv_params(comp, n, mode)
             om_ran = comp.omega / n if mode in ("efbv", "diana") else comp.omega
             gamma = C.efbv_stepsize(L, Lt, comp.eta, comp.omega, om_ran, lam, nu)
-            t0 = time.perf_counter()
+            t0 = now_s()
             _, _, trace = efbv_gd(jax.random.PRNGKey(0), jnp.zeros(d), grad_fn,
                                   efbv_init(n, d), comp, lam, nu, gamma, ROUNDS, f_fn)
-            us = (time.perf_counter() - t0) * 1e6
+            us = (now_s() - t0) * 1e6
             gaps = np.asarray(trace) - f_star
             hit = np.argmax(gaps < TARGET_GAP) if (gaps < TARGET_GAP).any() else -1
             ledger = CommLedger.from_rounds(

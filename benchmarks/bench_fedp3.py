@@ -11,12 +11,11 @@ wire format the clients actually ship), so the relative-upload column and the
 absolute MB both come from the ledger, not a separate counter."""
 from __future__ import annotations
 
-import time
 
 import numpy as np
 
-from benchmarks.common import emit
-from repro.comm import CommLedger
+from benchmarks.common import emit, now_s
+from repro.comm import UPLOAD_TAG, CommLedger
 from repro.core.fedp3 import FedP3Config, fedp3_train, make_classification
 from repro.data.federated import classwise_split, dirichlet_split
 
@@ -39,7 +38,8 @@ def _upload_ledger(up_trace) -> CommLedger:
     led = CommLedger()
     prev = 0.0
     for t, cum_floats in enumerate(np.asarray(up_trace)):
-        led.record(t, "clients->server", (cum_floats - prev) * 4, kind="inter")
+        led.record(t, "clients->server", (cum_floats - prev) * 4, kind="inter",
+                   tag=UPLOAD_TAG)
         prev = cum_floats
     return led
 
@@ -53,9 +53,9 @@ def run():
         for name, k in (("full", 4), ("OPU3", 3), ("OPU2", 2), ("LowerB", 1)):
             cfg = FedP3Config(n_clients=10, clients_per_round=5, layers_per_client=k,
                               global_prune_ratio=0.9, local_steps=4, lr=0.2, seed=0)
-            t0 = time.perf_counter()
+            t0 = now_s()
             acc, up, _ = fedp3_train(cfg, Xs, Ys, SIZES, ROUNDS, Xte, Yte)
-            us = (time.perf_counter() - t0) * 1e6
+            us = (now_s() - t0) * 1e6
             led = _upload_ledger(up)
             if full_bytes is None:
                 full_bytes = led.total_bytes
@@ -68,9 +68,9 @@ def run():
     for r in (1.0, 0.9, 0.7, 0.5):
         cfg = FedP3Config(n_clients=10, clients_per_round=5, layers_per_client=3,
                           global_prune_ratio=r, local_steps=4, lr=0.2, seed=0)
-        t0 = time.perf_counter()
+        t0 = now_s()
         acc, _, _ = fedp3_train(cfg, Xs, Ys, SIZES, ROUNDS, Xte, Yte)
-        us = (time.perf_counter() - t0) * 1e6
+        us = (now_s() - t0) * 1e6
         rows.append((f"fedp3_fig4.4/prune={r}", us, f"acc={acc[-1]:.3f}"))
 
     # --- Tab 4.2: local pruning strategies
@@ -78,18 +78,18 @@ def run():
         cfg = FedP3Config(n_clients=10, clients_per_round=5, layers_per_client=3,
                           global_prune_ratio=0.9, local_strategy=strat,
                           local_steps=4, lr=0.2, seed=0)
-        t0 = time.perf_counter()
+        t0 = now_s()
         acc, _, _ = fedp3_train(cfg, Xs, Ys, SIZES, ROUNDS, Xte, Yte)
-        us = (time.perf_counter() - t0) * 1e6
+        us = (now_s() - t0) * 1e6
         rows.append((f"fedp3_tab4.2/{strat}", us, f"acc={acc[-1]:.3f}"))
 
     # --- Fig 4.5: aggregation strategies
     for agg in ("simple", "weighted"):
         cfg = FedP3Config(n_clients=10, clients_per_round=5, layers_per_client=3,
                           aggregation=agg, local_steps=4, lr=0.2, seed=0)
-        t0 = time.perf_counter()
+        t0 = now_s()
         acc, _, _ = fedp3_train(cfg, Xs, Ys, SIZES, ROUNDS, Xte, Yte)
-        us = (time.perf_counter() - t0) * 1e6
+        us = (now_s() - t0) * 1e6
         rows.append((f"fedp3_fig4.5/{agg}", us, f"acc={acc[-1]:.3f}"))
     return rows
 

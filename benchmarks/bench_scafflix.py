@@ -9,14 +9,13 @@ target (each communicated round ships one dense fp32 model per client: the
 encoded payload of the identity codec, recorded per round in the ledger)."""
 from __future__ import annotations
 
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
-from repro.comm import CommLedger, encode
+from benchmarks.common import emit, now_s
+from repro.comm import UPLOAD_TAG, CommLedger, encode
 from repro.core import compressors as C
 from repro.core.scafflix import (
     flix_objective, flix_optimum, local_optimum, logreg_grads,
@@ -45,7 +44,8 @@ def run():
         led = CommLedger()
         for t, did_comm in enumerate(np.asarray(comms)[: upto + 1]):
             if did_comm:
-                led.record(t, "client->server", msg_bytes, kind="inter")
+                led.record(t, "client->server", msg_bytes, kind="inter",
+                           tag=UPLOAD_TAG)
         return led.total_bytes
 
     for alpha in (0.1, 0.3, 0.5, 0.9):
@@ -54,13 +54,13 @@ def run():
         fstar = float(flix_objective(xf, A, b, prob.mu, alphas, x_loc))
 
         # --- Scafflix (p=0.2, per-client stepsizes 1/L_i)
-        t0 = time.perf_counter()
+        t0 = now_s()
         st = scafflix_init(jnp.ones(d), n, x_loc)
         ev = lambda st: flix_objective(jnp.mean(st.x, 0), A, b, prob.mu, alphas, x_loc)
         _, (trace, comms) = scafflix_run(
             jax.random.PRNGKey(0), st, gfn, 0.2, jnp.asarray(1.0 / Ls), alphas,
             ROUNDS, ev)
-        us = (time.perf_counter() - t0) * 1e6
+        us = (now_s() - t0) * 1e6
         gaps = np.asarray(trace) - fstar
         cum_comms = np.cumsum(np.asarray(comms))
         hit = np.argmax(gaps < TARGET) if (gaps < TARGET).any() else -1
@@ -73,13 +73,13 @@ def run():
         L = float(np.max(Ls))
         x = jnp.ones(d)
         gd_gaps = []
-        t0 = time.perf_counter()
+        t0 = now_s()
         for t in range(ROUNDS):
             xt = alphas[:, None] * x[None] + (1 - alphas[:, None]) * x_loc
             g = jnp.mean(alphas[:, None] * gfn(xt), axis=0)
             x = x - (1.0 / L) * g
             gd_gaps.append(float(flix_objective(x, A, b, prob.mu, alphas, x_loc)) - fstar)
-        us = (time.perf_counter() - t0) * 1e6
+        us = (now_s() - t0) * 1e6
         gd_gaps = np.asarray(gd_gaps)
         hit = np.argmax(gd_gaps < TARGET) if (gd_gaps < TARGET).any() else -1
         derived = (f"comms_to_{TARGET:g}={hit};"
@@ -94,11 +94,11 @@ def run():
     for p in (0.1, 0.2, 0.5):
         st = scafflix_init(jnp.ones(d), n, x_loc)
         ev = lambda st: flix_objective(jnp.mean(st.x, 0), A, b, prob.mu, alphas, x_loc)
-        t0 = time.perf_counter()
+        t0 = now_s()
         _, (trace, comms) = scafflix_run(
             jax.random.PRNGKey(2), st, gfn, p, jnp.asarray(1.0 / Ls), alphas,
             ROUNDS, ev)
-        us = (time.perf_counter() - t0) * 1e6
+        us = (now_s() - t0) * 1e6
         gaps = np.asarray(trace) - fstar
         cum = np.cumsum(np.asarray(comms))
         hit = np.argmax(gaps < TARGET) if (gaps < TARGET).any() else -1

@@ -12,12 +12,11 @@ converts bytes to seconds — the physical version of the paper's abstract
 c_local/c_global units."""
 from __future__ import annotations
 
-import time
 
 import numpy as np
 
-from benchmarks.common import emit
-from repro.comm import CommLedger, get_topology
+from benchmarks.common import emit, now_s
+from repro.comm import UPLOAD_TAG, CommLedger, get_topology
 from repro.core.sppm import (
     balanced_blocks, block_sampling, nice_sampling, sigma_star_nice,
     sigma_star_stratified, solve_erm, sppm_as, stratified_sampling,
@@ -35,7 +34,7 @@ def run():
 
     # --- Fig 5.1/5.2: TK vs K for several gammas (nice sampling, GD prox)
     for gamma in (5.0, 50.0, 500.0):
-        t0 = time.perf_counter()
+        t0 = now_s()
         best = (None, np.inf)
         curve = []
         for K in KS:
@@ -46,12 +45,12 @@ def run():
             curve.append(f"K{K}:{cost if np.isfinite(cost) else 'inf'}")
             if cost < best[1]:
                 best = (K, cost)
-        us = (time.perf_counter() - t0) * 1e6
+        us = (now_s() - t0) * 1e6
         rows.append((f"sppm_fig5.1/gamma={gamma}", us,
                      f"bestK={best[0]};cost={best[1]};curve=" + "|".join(curve)))
 
     # --- LocalGD (FedAvg-like) baseline: K local GD steps, cost = K*T as well
-    t0 = time.perf_counter()
+    t0 = now_s()
     best = (None, np.inf)
     for K in KS:
         draw, p = nice_sampling(np.random.default_rng(5), prob.n_clients, 8)
@@ -61,13 +60,13 @@ def run():
         cost = r.total_cost if r.total_cost is not None else np.inf
         if cost < best[1]:
             best = (K, cost)
-    us = (time.perf_counter() - t0) * 1e6
+    us = (now_s() - t0) * 1e6
     rows.append(("sppm_fig5.2/localgd_baseline", us, f"bestK={best[0]};cost={best[1]}"))
 
     # --- Fig 5.3: sampling comparison at fixed budget
     gi = _client_grads_at(prob, x_star)
     blocks = balanced_blocks(gi, 8)
-    t0 = time.perf_counter()
+    t0 = now_s()
     res = {}
     for name, (draw, p) in {
         "nice": nice_sampling(np.random.default_rng(5), prob.n_clients, 8),
@@ -76,7 +75,7 @@ def run():
     }.items():
         r = sppm_as(prob, x_star, draw, p, gamma=5.0, K=8, T=200, solver="newton", seed=0)
         res[name] = float(r.errors[-50:].mean())
-    us = (time.perf_counter() - t0) * 1e6
+    us = (now_s() - t0) * 1e6
     rows.append(("sppm_fig5.3/sampling", us,
                  ";".join(f"{k}={v:.2e}" for k, v in res.items())))
 
@@ -86,7 +85,7 @@ def run():
                  f"nice={s_nice:.3e};stratified={s_ss:.3e};ss_le_nice={s_ss <= s_nice}"))
 
     # --- Fig 5.6: hierarchical FL, c1=0.05 c2=1
-    t0 = time.perf_counter()
+    t0 = now_s()
     best = (None, np.inf)
     for K in KS:
         draw, p = nice_sampling(np.random.default_rng(5), prob.n_clients, 8)
@@ -100,7 +99,7 @@ def run():
     ref = sppm_as(prob, x_star, draw, p, gamma=50.0, K=1, T=300, solver="gd",
                   eps=EPS, c_local=0.05, c_global=1.0, seed=0)
     refc = ref.total_cost if ref.total_cost is not None else np.inf
-    us = (time.perf_counter() - t0) * 1e6
+    us = (now_s() - t0) * 1e6
     save = (1 - best[1] / refc) * 100 if np.isfinite(refc) and np.isfinite(best[1]) else float("nan")
     rows.append(("sppm_fig5.6/hierarchical", us,
                  f"bestK={best[0]};cost={best[1]:.2f};fedavg={refc};saving={save:.1f}%"))
@@ -112,8 +111,10 @@ def run():
         msg = prob.dim * 4  # one dense fp32 model per message
         for t in range(n_global):
             for _ in range(K):
-                led.record(t, "client->cluster", msg, kind="intra", phase=0)
-            led.record(t, "cluster->server", msg, kind="inter", phase=1)
+                led.record(t, "client->cluster", msg, kind="intra", phase=0,
+                           tag=UPLOAD_TAG)
+            led.record(t, "cluster->server", msg, kind="inter", phase=1,
+                       tag=UPLOAD_TAG)
         return led.total_time_s(get_topology("geo_wan"))
 
     if best[0] is not None and np.isfinite(best[1]) and np.isfinite(refc):

@@ -6,13 +6,12 @@ Also end-task: LM loss delta of the pruned tiny model (perplexity proxy).
 Derived: relative reconstruction error / loss after prune."""
 from __future__ import annotations
 
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, now_s
 from repro.configs import get_config
 from repro.core import symwanda as sw
 from repro.data.synthetic import SyntheticLMDataset, lm_batch_iterator
@@ -46,9 +45,9 @@ def run():
 
     # --- Tab 6.3/6.4: methods at 50 %
     for m in ("magnitude", "wanda", "ria", "symwanda", "stochria"):
-        t0 = time.perf_counter()
+        t0 = now_s()
         Wp, _ = sw.prune(W, X, method=m, sparsity=0.5, key=jax.random.PRNGKey(1))
-        us = (time.perf_counter() - t0) * 1e6
+        us = (now_s() - t0) * 1e6
         err = float(sw.reconstruction_error(W, Wp, X))
         rows.append((f"symwanda_tab6.3/{m}@50", us, f"recon_err={err:.4f}"))
 
@@ -62,9 +61,9 @@ def run():
     Wp, mask = sw.prune(W, X, method="wanda", sparsity=0.6)
     e0 = float(sw.reconstruction_error(W, Wp, X))
     for name, use_ria in (("dsnot", False), ("r2_dsnot", True)):
-        t0 = time.perf_counter()
+        t0 = now_s()
         Wd, _ = sw.r2_dsnot(W, mask, X, sw.DSnoTConfig(iters=30, use_ria_boundary=use_ria))
-        us = (time.perf_counter() - t0) * 1e6
+        us = (now_s() - t0) * 1e6
         e1 = float(sw.reconstruction_error(W, Wd, X))
         rows.append((f"symwanda_tab6.5/{name}@60", us,
                      f"recon_err={e1:.4f};vs_wanda={e1/e0:.3f}"))
@@ -106,9 +105,9 @@ def run():
     base_logits, _ = forward_train(params, cfg, batch)
     base = float(cross_entropy_loss(base_logits, batch["targets"]))
     for m in ("magnitude", "wanda"):
-        t0 = time.perf_counter()
+        t0 = now_s()
         pl, _ = forward_train(prune_model(m), cfg, batch)
-        us = (time.perf_counter() - t0) * 1e6
+        us = (now_s() - t0) * 1e6
         loss = float(cross_entropy_loss(pl, batch["targets"]))
         rows.append((f"symwanda_endtask/{m}@50", us,
                      f"loss={loss:.4f};delta={loss-base:+.4f}"))

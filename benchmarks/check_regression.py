@@ -65,22 +65,27 @@ def diff(current: dict, baseline: dict, bytes_tol: float,
 
 
 def check_pair(cur_path: str, base_path: str, bytes_tol: float,
-               time_ratio: float) -> int:
+               time_ratio: float) -> List[str]:
+    """Returns every failure for this pair (empty list = pass), each
+    carrying the baseline path so a red CI log says exactly which committed
+    file to re-baseline."""
     label = os.path.basename(cur_path)
     if not os.path.exists(cur_path):
-        print(f"FAIL {label}: current file {cur_path} not found")
-        return 1
+        fail = f"{label}: current file {cur_path} not found (vs {base_path})"
+        print(f"FAIL {fail}")
+        return [fail]
     failures, notes = diff(load_rows(cur_path), load_rows(base_path),
                            bytes_tol, time_ratio)
     for n in notes:
         print(f"  note {label}: {n}")
+    failures = [f"{label}: {f} [baseline: {base_path}]" for f in failures]
     for f in failures:
-        print(f"  FAIL {label}: {f}")
+        print(f"  FAIL {f}")
     n_rows = len(load_rows(base_path))
     status = "FAIL" if failures else "ok"
-    print(f"{status} {label}: {n_rows} baseline rows, "
+    print(f"{status} {label}: {n_rows} baseline rows vs {base_path}, "
           f"{len(failures)} failure(s)")
-    return 1 if failures else 0
+    return failures
 
 
 def main(argv=None) -> int:
@@ -96,15 +101,23 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     if args.current:
-        base = args.baseline or os.path.join(
-            BASELINE_DIR, os.path.basename(args.current))
-        return check_pair(args.current, base, args.bytes_tol, args.time_ratio)
+        pairs = [(args.current, args.baseline or os.path.join(
+            BASELINE_DIR, os.path.basename(args.current)))]
+    else:
+        pairs = [(cur, os.path.join(BASELINE_DIR, base))
+                 for cur, base in DEFAULT_PAIRS]
 
-    rc = 0
-    for cur, base in DEFAULT_PAIRS:
-        rc |= check_pair(cur, os.path.join(BASELINE_DIR, base),
-                         args.bytes_tol, args.time_ratio)
-    return rc
+    all_failures: List[str] = []
+    for cur, base in pairs:
+        all_failures.extend(
+            check_pair(cur, base, args.bytes_tol, args.time_ratio))
+    if all_failures:
+        print(f"\n{len(all_failures)} failure(s) across "
+              f"{len(pairs)} benchmark file(s):")
+        for f in all_failures:
+            print(f"  {f}")
+        return 1
+    return 0
 
 
 if __name__ == "__main__":

@@ -39,6 +39,16 @@ def module_trace(label: str, **meta):
         obs_trace.export_jsonl(path)
 
 
+def now_s() -> float:
+    """Monotonic wall clock in seconds for bench timing loops.
+
+    Benches time through here (or :func:`timed`) rather than calling
+    ``time.*`` directly — this module is the one RL003-sanctioned clock
+    source under ``benchmarks/``.
+    """
+    return time.perf_counter()
+
+
 def timed(fn: Callable, repeats: int = 3, warmup: int = 1,
           name: Optional[str] = None) -> float:
     """Median wall-time per call in microseconds.

@@ -17,7 +17,8 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 import argparse
 import glob
 import json
-import time
+
+from benchmarks.common import now_s  # jax-free; safe before XLA_FLAGS users
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -32,7 +33,7 @@ def analyze_combo(arch: str, shape: str, sync: str = "dense"):
 
     cfg = get_config(arch)
     mesh = make_production_mesh(multi_pod=False)
-    t0 = time.time()
+    t0 = now_s()
     cc = corrected_costs(cfg, mesh, shape, sync_mode=sync)
     mf = model_flops(cfg, shape)
     c = cc["corrected"]
@@ -58,7 +59,7 @@ def analyze_combo(arch: str, shape: str, sync: str = "dense"):
         "useful_ratio": ratio,
         "collectives_by_kind": {k[5:]: v for k, v in c.items() if k.startswith("coll_") and k != "coll_total"},
         "advice": advice,
-        "analysis_s": round(time.time() - t0, 1),
+        "analysis_s": round(now_s() - t0, 1),
         "variants": cc["variants"],
     }
 

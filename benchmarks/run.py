@@ -16,7 +16,6 @@ import json
 import os
 import re
 import sys
-import time
 
 _BYTES_RE = re.compile(r"(?:^|;)bytes=(\d+)")
 
@@ -38,7 +37,7 @@ def main() -> None:
     from benchmarks import bench_comm, bench_efbv, bench_faults, bench_fedp3
     from benchmarks import bench_hier, bench_kernels, bench_scafflix
     from benchmarks import bench_scafflix_nn, bench_sppm, bench_symwanda
-    from benchmarks.common import emit, module_trace, trace_dir
+    from benchmarks.common import emit, module_trace, now_s, trace_dir
     from repro.obs import trace as obs_trace
 
     modules = [
@@ -60,7 +59,7 @@ def main() -> None:
     }
     print("name,us_per_call,derived")
     for label, mod in modules:
-        t0 = time.time()
+        t0 = now_s()
         short = mod.__name__.rsplit(".", 1)[-1].removeprefix("bench_")
         try:
             # with REPRO_TRACE=1 each module's spans land in its own
@@ -79,7 +78,7 @@ def main() -> None:
                 print(f"# {label} rows -> {path}", file=sys.stderr)
         except Exception as e:  # noqa: BLE001 — keep the suite going
             print(f"{label}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
-        print(f"# {label} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        print(f"# {label} done in {now_s()-t0:.1f}s", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -27,7 +27,7 @@ from typing import Optional, Tuple
 import jax
 
 from repro.comm import codecs
-from repro.comm.ledger import CommLedger
+from repro.comm.ledger import RETRY_TAG, CommLedger
 from repro.comm.topology import (DEFAULT_PROFILE, DEFAULT_TILE_BYTES,
                                  CodecProfile, Topology, get_topology)
 from repro.comm.tree import TreeTopology, get_tree_topology
@@ -309,7 +309,7 @@ def round_ledger(sync, n_params: int, n_rounds: Optional[int] = None,
             if lv.retry_bytes > 0:
                 led.record(t, f"{lv.name}->up",
                            round(lv.retry_bytes * lv.period),
-                           kind=kind, phase=l, tag="retry")
+                           kind=kind, phase=l, tag=RETRY_TAG)
     return led
 
 

@@ -80,6 +80,12 @@ class Payload:
 # ---------------------------------------------------------------------------
 # bit-stream helpers (little-endian, numpy — host-side transport packing)
 # ---------------------------------------------------------------------------
+# a value shifted by its in-byte offset (<= 7 bits) must still fit in the
+# uint64 scatter words below; repro.lint.contracts checks every registered
+# sparse-block width against this bound
+_PACK_MAX_NBITS = 56
+
+
 def _pack_uint_stream(vals: np.ndarray, nbits: int) -> np.ndarray:
     """Pack unsigned ints < 2**nbits into a little-endian uint8 stream.
 
@@ -91,7 +97,7 @@ def _pack_uint_stream(vals: np.ndarray, nbits: int) -> np.ndarray:
     n = int(vals.size)
     if n == 0:
         return np.zeros((0,), np.uint8)
-    assert nbits <= 56, nbits  # shifted value must fit in a uint64
+    assert nbits <= _PACK_MAX_NBITS, nbits
     total = (n * nbits + 7) >> 3
     bitpos = np.arange(n, dtype=np.int64) * nbits
     byte0 = bitpos >> 3
@@ -111,7 +117,7 @@ def _pack_uint_stream(vals: np.ndarray, nbits: int) -> np.ndarray:
 def _unpack_uint_stream(buf: np.ndarray, n: int, nbits: int) -> np.ndarray:
     if n == 0:
         return np.zeros((0,), np.int64)
-    assert nbits <= 56, nbits
+    assert nbits <= _PACK_MAX_NBITS, nbits
     spans = ((nbits + 7) >> 3) + 1
     bufp = np.concatenate([buf, np.zeros(spans, np.uint8)])  # tail gathers
     bitpos = np.arange(n, dtype=np.int64) * nbits

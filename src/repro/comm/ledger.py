@@ -27,6 +27,34 @@ from typing import Dict, List, Optional
 
 from repro.comm.topology import Topology
 
+# ---------------------------------------------------------------------------
+# tag registry — the closed namespace of ``CommRecord.tag`` values.
+#
+# ``bytes_by_tag()`` is what the obs report audits; free-typed tag strings
+# silently fork that attribution ("retry" vs "retries"), so every literal tag
+# must be one of these constants (enforced by ``repro.lint`` rule RL004).
+# Dynamic tags — aggregation-tree level names, payload wire schemes — are
+# registered at runtime via :func:`register_tag`.
+# ---------------------------------------------------------------------------
+RETRY_TAG = "retry"          # retransmissions after a drop / checksum failure
+UPLOAD_TAG = "upload"        # leaf -> aggregator payloads
+BROADCAST_TAG = "broadcast"  # aggregator -> leaf model pushes
+WIRE_SCHEME_TAGS = frozenset(
+    {"dense", "sparse_idx32", "sparse_block", "sparse_bitmap", "quant"})
+
+_RUNTIME_TAGS: set = set()
+
+
+def register_tag(tag: str) -> str:
+    """Register a runtime tag (tree level names etc.); returns it unchanged."""
+    _RUNTIME_TAGS.add(str(tag))
+    return str(tag)
+
+
+def known_tags() -> frozenset:
+    return (frozenset({RETRY_TAG, UPLOAD_TAG, BROADCAST_TAG})
+            | WIRE_SCHEME_TAGS | frozenset(_RUNTIME_TAGS))
+
 
 @dataclass(frozen=True)
 class CommRecord:
@@ -122,8 +150,8 @@ class CommLedger:
     @property
     def retry_bytes(self) -> int:
         """Bytes charged to retransmissions (faulty links re-sending after a
-        drop or a checksum-caught corruption, tag ``"retry"``)."""
-        return sum(r.nbytes for r in self.records if r.tag == "retry")
+        drop or a checksum-caught corruption, tag :data:`RETRY_TAG`)."""
+        return sum(r.nbytes for r in self.records if r.tag == RETRY_TAG)
 
     def cumulative_bytes(self) -> List[int]:
         """Running total after each round 0..n_rounds-1 (Fig 2.2 x-axis)."""

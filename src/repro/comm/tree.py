@@ -50,9 +50,13 @@ class TreeTopology:
     def __post_init__(self):
         if not self.levels:
             raise ValueError("TreeTopology needs at least one level")
+        from repro.comm.ledger import register_tag
         for lev in self.levels:
             if lev.fanout < 1:
                 raise ValueError(f"level {lev.name!r}: fanout must be >= 1")
+            # ledger records are tagged with the level name; register it so
+            # bytes_by_tag() attribution stays within the known-tag namespace
+            register_tag(lev.name)
 
     # -- shape ---------------------------------------------------------------
     @property

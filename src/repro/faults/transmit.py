@@ -23,6 +23,8 @@ import numpy as np
 
 from repro.faults.model import FaultConfig, counter_uniform
 
+# mirrors repro.comm.ledger.RETRY_TAG — importing the ledger here would close
+# a cycle (comm.tree imports faults.model); tests pin the two values equal
 RETRY_TAG = "retry"
 
 

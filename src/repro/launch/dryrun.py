@@ -15,7 +15,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json
-import time
 import traceback
 
 import jax
@@ -27,6 +26,7 @@ from repro.launch import hlo_analysis as hlo
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import input_specs, skip_reason
 from repro.models import cache_specs, init_params, model_dtype
+from repro.obs.trace import wall_s
 from repro.sharding.rules import (
     batch_specs, cache_pspecs, data_axes, opt_state_specs, param_specs)
 from repro.training.steps import init_train_state, make_train_step, make_prefill_step, make_decode_step
@@ -249,7 +249,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, sync_mode: str = "dense
         return rec
 
     mesh = make_production_mesh(multi_pod=multi_pod)
-    t0 = time.time()
+    t0 = wall_s()
     try:
         if shape.kind == "train":
             lowered = build_train_lowering(cfg, mesh, shape, sync_mode, compressor,
@@ -258,10 +258,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, sync_mode: str = "dense
             lowered = build_prefill_lowering(cfg, mesh, shape, remat=remat)
         else:
             lowered = build_decode_lowering(cfg, mesh, shape)
-        rec["lower_s"] = round(time.time() - t0, 2)
-        t1 = time.time()
+        rec["lower_s"] = round(wall_s() - t0, 2)
+        t1 = wall_s()
         compiled = lowered.compile()
-        rec["compile_s"] = round(time.time() - t1, 2)
+        rec["compile_s"] = round(wall_s() - t1, 2)
         rec["memory"] = hlo.memory_dict(compiled)
         rec["cost"] = hlo.cost_dict(compiled)
         rec["collectives"] = hlo.collective_bytes(compiled.as_text()).as_dict()

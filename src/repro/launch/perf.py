@@ -26,7 +26,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 import argparse
 import json
-import time
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -99,7 +98,7 @@ def measure(arch, shape_name, variants, multi_pod=False):
     try:
         # full lowering -> memory proof (each phase is a flight-recorder span
         # when tracing is on, so a traced hillclimb shows where compiles go)
-        t0 = time.time()
+        t0 = obs_trace.wall_s()
         with obs_trace.span("perf/lower", arch=arch, shape=shape_name,
                             sync=sync):
             if shape.kind == "train":
@@ -135,7 +134,7 @@ def measure(arch, shape_name, variants, multi_pod=False):
                             key=lambda k: terms[k]),
             "useful_ratio": mf / (c.get("flops", 1) * n_chips),
             "mem_gb": {k: v / 1e9 for k, v in mem.items() if "size" in k},
-            "compile_s": round(time.time() - t0, 1),
+            "compile_s": round(obs_trace.wall_s() - t0, 1),
         }
     finally:
         reset_variants()

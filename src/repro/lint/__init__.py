@@ -1,0 +1,22 @@
+"""repro.lint — repo-native static analyzer.
+
+Two engines behind one CLI (``python -m repro.lint``):
+
+* **Engine 1** — AST rules RL001–RL005 over ``src/repro`` + ``benchmarks``
+  (host syncs in jit, unseeded randomness, wall-clock in modeled paths,
+  unregistered ledger tags, tracer branches), with per-line
+  ``# repro: noqa[RULE]`` suppressions and a committed baseline.
+* **Engine 2** — abstract-interpretation contract checks RC001–RC003
+  (``jax.eval_shape`` over the compressor registry, payload-vs-accounting
+  byte formulas, Pallas kernel static budgets).
+"""
+from repro.lint.framework import (  # noqa: F401
+    Finding,
+    Project,
+    all_rules,
+    apply_baseline,
+    build_project,
+    load_baseline,
+    run_rules,
+    write_baseline,
+)

@@ -1,0 +1,94 @@
+"""CLI: ``python -m repro.lint [--format=text|json] [paths...]``.
+
+Exit status: 0 when every finding is baselined or suppressed, 1 otherwise.
+CI runs the JSON form and uploads the report as an artifact; developers run
+the bare form from the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+from repro.lint.framework import (
+    Finding,
+    all_rules,
+    apply_baseline,
+    build_project,
+    load_baseline,
+    run_rules,
+    write_baseline,
+)
+
+DEFAULT_PATHS = ("src/repro", "benchmarks")
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "baseline.json")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("paths", nargs="*",
+                    help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline fingerprint file (default: the committed "
+                         "src/repro/lint/baseline.json)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline from the current findings "
+                         "and exit 0")
+    ap.add_argument("--no-contracts", action="store_true",
+                    help="skip engine 2 (eval_shape contract checks)")
+    ap.add_argument("--rules", default=None,
+                    help="comma list of engine-1 rules to run (default: all)")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or [p for p in DEFAULT_PATHS if os.path.isdir(p)]
+    if not paths:
+        print("repro.lint: no lintable paths (run from the repo root or "
+              "pass paths)", file=sys.stderr)
+        return 2
+
+    rule_names = ([r.strip().upper() for r in args.rules.split(",")]
+                  if args.rules else None)
+    unknown = set(rule_names or ()) - set(all_rules())
+    if unknown:
+        print(f"repro.lint: unknown rules {sorted(unknown)}", file=sys.stderr)
+        return 2
+
+    project = build_project(paths)
+    findings: List[Finding] = run_rules(project, rule_names)
+    if not args.no_contracts:
+        from repro.lint.contracts import run_contracts
+        findings.extend(run_contracts())
+
+    if args.write_baseline:
+        write_baseline(args.baseline, findings)
+        print(f"wrote {len(findings)} fingerprint(s) to {args.baseline}")
+        return 0
+
+    fresh, n_baselined = apply_baseline(findings, load_baseline(args.baseline))
+
+    if args.format == "json":
+        json.dump({
+            "findings": [f.to_json() for f in fresh],
+            "baselined": n_baselined,
+            "checked_files": len(project.files),
+            "paths": paths,
+            "baseline": args.baseline,
+        }, sys.stdout, indent=1)
+        sys.stdout.write("\n")
+    else:
+        for f in fresh:
+            print(f.format())
+        tail = f" ({n_baselined} baselined)" if n_baselined else ""
+        print(f"repro.lint: {len(fresh)} finding(s) in "
+              f"{len(project.files)} file(s){tail}")
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,293 @@
+"""Lightweight jit call-graph over the linted files.
+
+Good enough for RL001/RL005, deliberately not a type checker:
+
+* **Roots** are functions whose bodies XLA traces: ``@jax.jit`` /
+  ``@partial(jax.jit, ...)`` decorated defs, functions passed to
+  ``jax.jit(f)``, bodies handed to ``lax.scan/cond/switch/fori_loop/
+  while_loop``, kernels handed to ``pl.pallas_call``, and — for the
+  ``jax.jit(make_step(...))`` factory idiom — every def nested inside the
+  factory.
+* **Edges** are name-based: a bare ``f(...)`` call resolves to any same-module
+  function named ``f`` (including nested defs); ``mod.f(...)`` resolves
+  through the file's ``import x as mod`` / ``from pkg import x as mod`` maps.
+  ``from pkg import f`` resolves bare ``f`` cross-module.
+* **Static params**: ``static_argnames`` / ``static_argnums`` on the jit
+  wrapper are recorded so RL005 doesn't taint config-style arguments.
+
+Over-approximation (same-name functions merge) is fine — it only means a
+function gets *checked*; it never hides one.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+LAX_TRACED = {  # lax entry points whose callable args run under trace
+    "scan": (0,), "cond": (1, 2), "switch": (1,),
+    "fori_loop": (2,), "while_loop": (0, 1), "map": (0,),
+    "associative_scan": (0,), "custom_root": (0, 1),
+}
+JIT_NAMES = {"jit"}          # bare names that mean jax.jit when imported
+PALLAS_CALL = "pallas_call"
+
+
+@dataclass
+class FuncNode:
+    module: str
+    qualname: str           # "outer.inner" for nested defs
+    relpath: str
+    node: ast.AST           # FunctionDef | AsyncFunctionDef | Lambda
+    is_root: bool = False
+    root_reasons: List[str] = field(default_factory=list)
+    static_params: Set[str] = field(default_factory=set)
+    calls: Set[str] = field(default_factory=set)        # bare local names
+    attr_calls: Set[Tuple[str, str]] = field(default_factory=set)  # (alias, name)
+
+    @property
+    def key(self) -> Tuple[str, str]:
+        return (self.module, self.qualname)
+
+    @property
+    def bare(self) -> str:
+        return self.qualname.rsplit(".", 1)[-1]
+
+    def params(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return [n for n in names if n not in ("self", "cls")]
+
+    def mark_root(self, reason: str, static: Optional[Set[str]] = None):
+        self.is_root = True
+        if reason not in self.root_reasons:
+            self.root_reasons.append(reason)
+        if static:
+            self.static_params |= static
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'jax.lax.scan' for an Attribute/Name chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _static_from_call(call: ast.Call) -> Set[str]:
+    """static_argnames from a partial(jax.jit, ...) / jax.jit(...) call."""
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            if isinstance(kw.value, ast.Constant) and isinstance(kw.value.value, str):
+                out.add(kw.value.value)
+            elif isinstance(kw.value, (ast.Tuple, ast.List, ast.Set)):
+                for elt in kw.value.elts:
+                    if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                        out.add(elt.value)
+    return out
+
+
+class _ModuleScan(ast.NodeVisitor):
+    """One pass over a file: functions, import maps, jit/lax/pallas sites."""
+
+    def __init__(self, ctx):
+        self.ctx = ctx
+        self.stack: List[str] = []
+        self.nodes: Dict[str, FuncNode] = {}       # qualname -> node
+        self.mod_aliases: Dict[str, str] = {}      # alias -> dotted module
+        self.from_imports: Dict[str, Tuple[str, str]] = {}  # name -> (mod, name)
+        self.root_marks: List[Tuple[str, str, Set[str], int]] = []  # (name, why, static, bound_pos)
+        self.factory_marks: List[Tuple[str, str]] = []         # (name, why)
+
+    # -- imports ------------------------------------------------------------
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            self.mod_aliases[a.asname or a.name.split(".")[0]] = a.name
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        if node.module and node.level == 0:
+            for a in node.names:
+                self.from_imports[a.asname or a.name] = (node.module, a.name)
+
+    # -- functions ----------------------------------------------------------
+    def _handle_func(self, node):
+        qual = ".".join(self.stack + [node.name])
+        fn = FuncNode(self.ctx.module, qual, self.ctx.relpath, node)
+        for deco in node.decorator_list:
+            d = dotted(deco)
+            if d in ("jax.jit", "jit", "pjit", "jax.pjit"):
+                fn.mark_root(f"@{d}")
+            elif isinstance(deco, ast.Call):
+                dc = dotted(deco.func)
+                if dc in ("jax.jit", "jit", "pjit", "jax.pjit"):
+                    fn.mark_root(f"@{dc}(...)", _static_from_call(deco))
+                elif dc in ("partial", "functools.partial") and deco.args:
+                    inner = dotted(deco.args[0])
+                    if inner in ("jax.jit", "jit", "pjit", "jax.pjit"):
+                        fn.mark_root(f"@partial({inner})",
+                                     _static_from_call(deco))
+        self.nodes[qual] = fn
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+        self._collect_calls(fn)
+
+    visit_FunctionDef = _handle_func
+    visit_AsyncFunctionDef = _handle_func
+
+    def _collect_calls(self, fn: FuncNode):
+        """Call edges out of ``fn``, not descending into nested defs (those
+        are their own nodes, reached through the bare-name edge)."""
+        for stmt in fn.node.body:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and sub is not fn.node:
+                    continue
+                if isinstance(sub, ast.Call):
+                    if isinstance(sub.func, ast.Name):
+                        fn.calls.add(sub.func.id)
+                    elif isinstance(sub.func, ast.Attribute) and \
+                            isinstance(sub.func.value, ast.Name):
+                        fn.attr_calls.add((sub.func.value.id, sub.func.attr))
+
+    # -- jit/lax/pallas call sites -------------------------------------------
+    def visit_Call(self, node: ast.Call):
+        d = dotted(node.func)
+        if d:
+            tail = d.rsplit(".", 1)[-1]
+            if d in ("jax.jit", "jax.pjit") or (tail in JIT_NAMES and
+                                                d == tail):
+                self._mark_traced_arg(node.args[0] if node.args else None,
+                                      f"{d}()", _static_from_call(node))
+            elif tail in LAX_TRACED and ("lax" in d or d == tail):
+                for i in LAX_TRACED[tail]:
+                    if i < len(node.args):
+                        self._mark_traced_arg(node.args[i], f"{d} body", set())
+            elif tail == PALLAS_CALL:
+                self._mark_traced_arg(node.args[0] if node.args else None,
+                                      "pallas_call kernel", set())
+        self.generic_visit(node)
+
+    def _mark_traced_arg(self, arg, why: str, static: Set[str],
+                         bound_pos: int = 0):
+        if arg is None:
+            return
+        if isinstance(arg, ast.Name):
+            self.root_marks.append((arg.id, why, static, bound_pos))
+        elif isinstance(arg, ast.Call):
+            # jax.jit(make_step(...)) / partial(kernel, ...): the factory's
+            # nested defs (or the partial'd function itself) get traced
+            inner = dotted(arg.func)
+            if inner in ("partial", "functools.partial") and arg.args:
+                # partial-bound arguments are static python values, not
+                # tracers: keywords by name, positionals by leading count
+                bound = static | {kw.arg for kw in arg.keywords if kw.arg}
+                self._mark_traced_arg(arg.args[0], why, bound,
+                                      bound_pos + len(arg.args) - 1)
+            elif isinstance(arg.func, ast.Name):
+                self.factory_marks.append((arg.func.id, f"{why} via factory"))
+        elif isinstance(arg, (ast.List, ast.Tuple)):
+            for elt in arg.elts:
+                self._mark_traced_arg(elt, why, static, bound_pos)
+        elif isinstance(arg, ast.ListComp):
+            self._mark_traced_arg(arg.elt, why, static, bound_pos)
+        elif isinstance(arg, ast.Lambda):
+            pass  # lambdas carry no name; their bodies are tiny — skip
+
+
+@dataclass
+class CallGraph:
+    nodes: Dict[Tuple[str, str], FuncNode]
+    by_bare: Dict[Tuple[str, str], List[Tuple[str, str]]]  # (mod, bare) -> keys
+    mod_aliases: Dict[str, Dict[str, str]]                 # module -> alias map
+    from_imports: Dict[str, Dict[str, Tuple[str, str]]]
+    reachable: Set[Tuple[str, str]] = field(default_factory=set)
+
+    @classmethod
+    def build(cls, project) -> "CallGraph":
+        nodes: Dict[Tuple[str, str], FuncNode] = {}
+        by_bare: Dict[Tuple[str, str], List[Tuple[str, str]]] = {}
+        aliases: Dict[str, Dict[str, str]] = {}
+        froms: Dict[str, Dict[str, Tuple[str, str]]] = {}
+        pending: List[Tuple[str, str, str, Set[str], int, bool]] = []
+        for ctx in project.files.values():
+            scan = _ModuleScan(ctx)
+            scan.visit(ctx.tree)
+            aliases[ctx.module] = scan.mod_aliases
+            froms[ctx.module] = scan.from_imports
+            for fn in scan.nodes.values():
+                nodes[fn.key] = fn
+                by_bare.setdefault((ctx.module, fn.bare), []).append(fn.key)
+            for name, why, static, bound_pos in scan.root_marks:
+                pending.append((ctx.module, name, why, static, bound_pos, False))
+            for name, why in scan.factory_marks:
+                pending.append((ctx.module, name, why, set(), 0, True))
+
+        graph = cls(nodes, by_bare, aliases, froms)
+        for module, name, why, static, bound_pos, factory in pending:
+            for key in graph.resolve(module, name):
+                if factory:
+                    for nested in graph.nested_of(key):
+                        nested.mark_root(why)
+                else:
+                    fn = nodes[key]
+                    fn.mark_root(why, static | set(fn.params()[:bound_pos]))
+
+        graph._compute_reachability()
+        return graph
+
+    def resolve(self, module: str, name: str) -> List[Tuple[str, str]]:
+        """Function keys a bare name may refer to in ``module``."""
+        hits = list(self.by_bare.get((module, name), []))
+        tgt = self.from_imports.get(module, {}).get(name)
+        if tgt is not None:
+            hits += self.by_bare.get(tgt, [])
+        return hits
+
+    def resolve_attr(self, module: str, alias: str, name: str
+                     ) -> List[Tuple[str, str]]:
+        mod = self.mod_aliases.get(module, {}).get(alias)
+        if mod is None:
+            tgt = self.from_imports.get(module, {}).get(alias)
+            if tgt is None:
+                return []
+            mod = ".".join(tgt)
+        return list(self.by_bare.get((mod, name), []))
+
+    def nested_of(self, key: Tuple[str, str]) -> List[FuncNode]:
+        module, qual = key
+        prefix = qual + "."
+        return [fn for k, fn in self.nodes.items()
+                if k[0] == module and k[1].startswith(prefix)]
+
+    def _compute_reachability(self):
+        work = [k for k, fn in self.nodes.items() if fn.is_root]
+        seen = set(work)
+        while work:
+            key = work.pop()
+            fn = self.nodes[key]
+            targets: List[Tuple[str, str]] = []
+            for name in fn.calls:
+                targets += self.resolve(fn.module, name)
+            for alias, name in fn.attr_calls:
+                targets += self.resolve_attr(fn.module, alias, name)
+            for t in targets:
+                if t not in seen:
+                    seen.add(t)
+                    work.append(t)
+        self.reachable = seen
+
+    def reachable_nodes(self) -> List[FuncNode]:
+        return [self.nodes[k] for k in sorted(self.reachable)]
+
+    def root_nodes(self) -> List[FuncNode]:
+        return [fn for fn in self.nodes.values() if fn.is_root]

@@ -1,0 +1,360 @@
+"""Engine 2 — abstract-interpretation contract checks (no training data).
+
+Three contract families, reported as RC-rule findings:
+
+* **RC001 codec fidelity** — every compressor in ``core.compressors._REGISTRY``
+  is instantiated from :data:`CONTRACT_PARAMS` and abstract-evaluated via
+  ``jax.eval_shape`` over a shape x dtype grid: the carrier must preserve the
+  input shape, and its dtype must be the input dtype or float32 (stochastic
+  quantizers promote through the f32 noise draw).
+
+* **RC002 payload accounting** — a small *concrete* probe per compressor
+  (host-side numpy encode prevents pure eval_shape here):
+  ``decode(encode(x)) == c(key, x)`` elementwise, the declared plane bytes
+  sum to ``payload.nbytes``, and ``codecs.extrapolate_bits(p, d, d)`` equals
+  ``p.nbits`` exactly — the accounting formulas and the wire planes must
+  describe the same bytes.
+
+* **RC003 kernel static budgets** — BlockSpec/grid arithmetic of every
+  Pallas kernel from module constants alone: per-invocation VMEM estimate
+  under a per-kernel budget (and the ~16 MB/core ceiling), bitpack word
+  width ``PACK_BITS <= 32``, sparse-block index width ``ceil(log2 block)``
+  within the uint-stream packer's 56-bit bound, quant wire bits within the
+  int8 plane — plus ``eval_shape`` through the jitted ``kernels.ops``
+  wrappers (works because ``pallas_call`` declares ``out_shape``) to pin the
+  plumbing's shape/dtype algebra.
+
+Run via ``python -m repro.lint`` (on by default; ``--no-contracts`` skips)
+or directly: ``run_contracts() -> list[Finding]``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+from repro.lint.framework import Finding
+
+# Every _REGISTRY entry needs a row here — several factories have required
+# kwargs (k_frac etc.) with no defaults.  test_lint asserts the coverage.
+CONTRACT_PARAMS: Dict[str, dict] = {
+    "identity": {},
+    "rand_k": {"k_frac": 0.25},
+    "top_k": {"k_frac": 0.25},
+    "topk_block": {"k_frac": 0.25, "block": 256},
+    "qsgd": {"bits": 8, "block": 256},
+    "qsgd_sharded": {"bits": 8, "block": 64},
+    "qsgd_kernel": {"bits": 8},
+    "mix_k": {"k_frac_top": 0.25, "k_frac_rand": 0.25},
+    "comp_k": {"k_frac_top": 0.1, "k_frac_rand": 0.5},
+}
+
+SHAPE_GRID = ((64,), (257,), (4096,), (8, 512))
+DTYPE_GRID = ("float32", "bfloat16")
+
+# per-invocation VMEM budgets (bytes) — deliberately far below the ~16 MB
+# VMEM/core so a tile-constant bump that 100x's the working set fails here
+# before it fails on hardware
+VMEM_CEILING = 16 * 1024 * 1024
+KERNEL_VMEM_BUDGETS = {
+    "quant8.quant_dequant_2d": 1 << 20,
+    "bitpack.pack_mask_2d": 1 << 20,
+    "bitpack.unpack_mask_2d": 1 << 20,
+    "bitpack.quant_pack_2d": 1 << 20,
+    "bitpack.unpack_dequant_2d": 1 << 20,
+    "stream.stream_quant_pack_2d": 1 << 21,
+    "nm_prune.nm_prune_2d": 1 << 21,
+    "wanda_score.wanda_prune_2d": 1 << 22,
+}
+
+
+def _finding(rule: str, path: str, message: str) -> Finding:
+    return Finding(rule, path, 1, 1, message, snippet=f"<{rule} contract>")
+
+
+def _allowed_dtypes(in_dtype) -> set:
+    import jax.numpy as jnp
+    return {jnp.dtype(in_dtype), jnp.dtype(jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RC001 — compressor shape/dtype fidelity under eval_shape
+# ---------------------------------------------------------------------------
+def check_compressor_grid() -> List[Finding]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.compressors import _REGISTRY, make_compressor
+
+    path = "src/repro/core/compressors.py"
+    out: List[Finding] = []
+    for name in sorted(_REGISTRY):
+        if name not in CONTRACT_PARAMS:
+            out.append(_finding(
+                "RC001", path,
+                f"compressor {name!r} has no CONTRACT_PARAMS row — the "
+                f"eval_shape grid does not cover it"))
+            continue
+        c = make_compressor(name, **CONTRACT_PARAMS[name])
+        for shape in SHAPE_GRID:
+            for dtype in DTYPE_GRID:
+                x = jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+                key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+                try:
+                    y = jax.eval_shape(lambda k, v: c(k, v), key, x)
+                except Exception as e:  # noqa: BLE001 — report, don't crash
+                    out.append(_finding(
+                        "RC001", path,
+                        f"{name} fails abstract eval on {shape} {dtype}: "
+                        f"{type(e).__name__}: {e}"))
+                    continue
+                if tuple(y.shape) != tuple(shape):
+                    out.append(_finding(
+                        "RC001", path,
+                        f"{name} on {shape} {dtype}: carrier shape "
+                        f"{tuple(y.shape)} != input shape"))
+                if jnp.dtype(y.dtype) not in _allowed_dtypes(dtype):
+                    out.append(_finding(
+                        "RC001", path,
+                        f"{name} on {shape} {dtype}: carrier dtype {y.dtype} "
+                        f"not in {{input, float32}}"))
+    for name in sorted(set(CONTRACT_PARAMS) - set(_REGISTRY)):
+        out.append(_finding(
+            "RC001", path,
+            f"CONTRACT_PARAMS row {name!r} matches no registered compressor"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RC002 — wire payload vs accounting byte formulas
+# ---------------------------------------------------------------------------
+def check_payload_accounting() -> List[Finding]:
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.comm import codecs
+    from repro.core.compressors import _REGISTRY, make_compressor
+
+    path = "src/repro/comm/codecs.py"
+    out: List[Finding] = []
+    d = 1000  # not a block multiple: stresses pad/trim on every scheme
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    for name in sorted(set(_REGISTRY) & set(CONTRACT_PARAMS)):
+        c = make_compressor(name, **CONTRACT_PARAMS[name])
+        try:
+            p = codecs.encode(c, key, x)
+            y = np.asarray(codecs.decode(p))
+        except Exception as e:  # noqa: BLE001 — report, don't crash
+            out.append(_finding(
+                "RC002", path,
+                f"{name}: encode/decode raised {type(e).__name__}: {e}"))
+            continue
+        if y.shape != (d,):
+            out.append(_finding(
+                "RC002", path,
+                f"{name}: decoded shape {y.shape} != ({d},)"))
+        if not codecs.roundtrip_equal(c, key, x):
+            out.append(_finding(
+                "RC002", path,
+                f"{name}: decode(encode(x)) != compressor carrier "
+                f"(scheme {p.scheme})"))
+        plane_bytes = sum(v.nbytes for v in p.planes.values())
+        if plane_bytes != p.nbytes:
+            out.append(_finding(
+                "RC002", path,
+                f"{name}: declared payload nbytes {p.nbytes} != plane sum "
+                f"{plane_bytes}"))
+        extr = codecs.extrapolate_bits(p, d, d)
+        if extr != p.nbits:
+            out.append(_finding(
+                "RC002", path,
+                f"{name}: extrapolate_bits(p, {d}, {d}) = {extr} != exact "
+                f"nbits {p.nbits} — accounting formula diverges from the "
+                f"wire planes at the probe size itself"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RC003 — Pallas kernel static budgets
+# ---------------------------------------------------------------------------
+def _vmem_estimates() -> Dict[str, int]:
+    """Bytes resident in VMEM for one grid step, from module constants.
+    f32 = 4B planes; int8 = 1B; the stream ring doubles everything by
+    N_SLOTS."""
+    from repro.kernels import bitpack as bp
+    from repro.kernels import nm_prune as nm
+    from repro.kernels import quant8 as q8
+    from repro.kernels import stream as st
+    from repro.kernels import wanda_score as ws
+
+    tile = q8.TILE_ROWS * q8.QBLOCK
+    pack_tile = bp.PACK_BITS * bp.PACK_LANES
+    ring_slot = tile * (4 + 4 + 1) + q8.TILE_ROWS * 4  # x + noise + q + scales
+    return {
+        # x + noise + out, all f32
+        "quant8.quant_dequant_2d": 3 * tile * 4,
+        # (32, 128) u32 mask block + (1, 128) u32 words
+        "bitpack.pack_mask_2d": pack_tile * 4 + bp.PACK_LANES * 4,
+        "bitpack.unpack_mask_2d": pack_tile * 4 + bp.PACK_LANES * 4,
+        # x f32 + noise f32 + q i8 + scales f32
+        "bitpack.quant_pack_2d": tile * (4 + 4 + 1) + q8.TILE_ROWS * 4,
+        "bitpack.unpack_dequant_2d": tile * (1 + 4) + q8.TILE_ROWS * 4,
+        "stream.stream_quant_pack_2d": st.N_SLOTS * ring_slot,
+        # w + scores + out + mask tiles, f32
+        "nm_prune.nm_prune_2d": 4 * nm.TILE_R * nm.TILE_C * 4,
+        # w + out + mask tiles f32 + per-row/col vectors
+        "wanda_score.wanda_prune_2d": (3 * ws.TILE_R * ws.TILE_C * 4
+                                       + 4 * (ws.TILE_R + ws.TILE_C) * 4),
+    }
+
+
+def check_kernel_budgets() -> List[Finding]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.comm.codecs import _PACK_MAX_NBITS
+    from repro.core.compressors import _REGISTRY, make_compressor
+    from repro.kernels import bitpack as bp
+    from repro.kernels import ops
+
+    out: List[Finding] = []
+    kpath = "src/repro/kernels"
+
+    # --- VMEM working set per grid step
+    for kernel, est in sorted(_vmem_estimates().items()):
+        budget = KERNEL_VMEM_BUDGETS[kernel]
+        path = f"{kpath}/{kernel.split('.')[0]}.py"
+        if est > budget:
+            out.append(_finding(
+                "RC003", path,
+                f"{kernel}: estimated VMEM/grid-step {est} B exceeds its "
+                f"budget {budget} B"))
+        if est > VMEM_CEILING:
+            out.append(_finding(
+                "RC003", path,
+                f"{kernel}: estimated VMEM/grid-step {est} B exceeds the "
+                f"~16 MB/core ceiling"))
+
+    # --- bitpack word-width overflow
+    if bp.PACK_BITS > 32:
+        out.append(_finding(
+            "RC003", f"{kpath}/bitpack.py",
+            f"PACK_BITS={bp.PACK_BITS} > 32: mask words no longer fit uint32"))
+    if bp.PACK_LANES % 128 != 0:
+        out.append(_finding(
+            "RC003", f"{kpath}/bitpack.py",
+            f"PACK_LANES={bp.PACK_LANES} is not 128-lane aligned"))
+
+    # --- wire-spec arithmetic of every registered compressor
+    for name in sorted(set(_REGISTRY) & set(CONTRACT_PARAMS)):
+        spec = make_compressor(name, **CONTRACT_PARAMS[name]).wire
+        if spec is None:
+            continue
+        if spec.scheme == "sparse_block":
+            nbits = max(1, math.ceil(math.log2(spec.block)))
+            if nbits > 32:
+                out.append(_finding(
+                    "RC003", "src/repro/comm/codecs.py",
+                    f"{name}: sparse_block offsets need {nbits} bits "
+                    f"(block={spec.block}) > 32 — index plane overflows"))
+            if nbits > _PACK_MAX_NBITS:
+                out.append(_finding(
+                    "RC003", "src/repro/comm/codecs.py",
+                    f"{name}: {nbits}-bit offsets exceed the uint-stream "
+                    f"packer bound ({_PACK_MAX_NBITS})"))
+        if spec.scheme == "quant" and not (0 < spec.bits <= 8):
+            out.append(_finding(
+                "RC003", "src/repro/comm/codecs.py",
+                f"{name}: quant bits={spec.bits} outside (0, 8] — the wire "
+                f"plane is int8"))
+
+    # --- grid/shape algebra through the jitted ops wrappers (eval_shape
+    #     traces pallas_call abstractly: out_shape is declared)
+    d = 1000
+    w = -(-d // bp.PACK_BITS)
+    mask = jax.ShapeDtypeStruct((d,), jnp.uint32)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    x = jax.ShapeDtypeStruct((d,), jnp.float32)
+    checks = [
+        ("pack_bits", lambda: jax.eval_shape(
+            lambda m: ops.pack_bits(m), mask), (w,), jnp.uint32),
+        ("unpack_bits", lambda: jax.eval_shape(
+            lambda v: ops.unpack_bits(v, d=d),
+            jax.ShapeDtypeStruct((w,), jnp.uint32)), (d,), jnp.uint32),
+        ("quantize_dequantize", lambda: jax.eval_shape(
+            lambda v, k: ops.quantize_dequantize(v, k), x, key),
+         (d,), jnp.float32),
+    ]
+    for label, run, want_shape, want_dtype in checks:
+        try:
+            res = run()
+        except Exception as e:  # noqa: BLE001 — report, don't crash
+            out.append(_finding(
+                "RC003", f"{kpath}/ops.py",
+                f"ops.{label}: abstract eval failed: "
+                f"{type(e).__name__}: {e}"))
+            continue
+        if tuple(res.shape) != want_shape or jnp.dtype(res.dtype) != want_dtype:
+            out.append(_finding(
+                "RC003", f"{kpath}/ops.py",
+                f"ops.{label}: eval_shape gave {tuple(res.shape)} "
+                f"{res.dtype}, expected {want_shape} {want_dtype}"))
+
+    # quantize_pack and the DMA-ring variant must agree on the wire planes
+    from repro.kernels import quant8 as q8
+    rows = -(-(-(-d // q8.QBLOCK)) // q8.TILE_ROWS) * q8.TILE_ROWS
+    for label, fn in (("quantize_pack", ops.quantize_pack),
+                      ("stream_quantize_pack", ops.stream_quantize_pack)):
+        try:
+            q, s = jax.eval_shape(lambda v, k, fn=fn: fn(v, k), x, key)
+        except Exception as e:  # noqa: BLE001 — report, don't crash
+            out.append(_finding(
+                "RC003", f"{kpath}/ops.py",
+                f"ops.{label}: abstract eval failed: "
+                f"{type(e).__name__}: {e}"))
+            continue
+        want_q, want_s = (rows, q8.QBLOCK), (rows, 1)
+        if tuple(q.shape) != want_q or jnp.dtype(q.dtype) != jnp.int8:
+            out.append(_finding(
+                "RC003", f"{kpath}/ops.py",
+                f"ops.{label}: q plane {tuple(q.shape)} {q.dtype}, expected "
+                f"{want_q} int8"))
+        if tuple(s.shape) != want_s or jnp.dtype(s.dtype) != jnp.float32:
+            out.append(_finding(
+                "RC003", f"{kpath}/ops.py",
+                f"ops.{label}: scales plane {tuple(s.shape)} {s.dtype}, "
+                f"expected {want_s} float32"))
+
+    # N:M prune keeps the logical (unpadded) shape
+    try:
+        w2 = jax.ShapeDtypeStruct((200, 300), jnp.float32)
+        pruned, pmask = jax.eval_shape(
+            lambda a, sc: ops.prune_nm(a, sc), w2, w2)
+        if tuple(pruned.shape) != (200, 300) or tuple(pmask.shape) != (200, 300):
+            out.append(_finding(
+                "RC003", f"{kpath}/ops.py",
+                f"ops.prune_nm: output shapes {tuple(pruned.shape)}/"
+                f"{tuple(pmask.shape)} != (200, 300)"))
+    except Exception as e:  # noqa: BLE001 — report, don't crash
+        out.append(_finding(
+            "RC003", f"{kpath}/ops.py",
+            f"ops.prune_nm: abstract eval failed: {type(e).__name__}: {e}"))
+    return out
+
+
+def run_contracts() -> List[Finding]:
+    """All three contract families; import errors become findings so the CLI
+    stays usable in stripped-down environments."""
+    out: List[Finding] = []
+    for fn in (check_compressor_grid, check_payload_accounting,
+               check_kernel_budgets):
+        try:
+            out.extend(fn())
+        except ImportError as e:
+            out.append(_finding(
+                "RC000", "src/repro/lint/contracts.py",
+                f"{fn.__name__}: cannot import checked modules ({e}); "
+                f"run with PYTHONPATH=src from the repo root"))
+    return out

@@ -1,0 +1,100 @@
+"""RL001 — host synchronization inside jit-traced code.
+
+``.item()``, ``jax.device_get``, ``np.asarray``/``np.array`` (and friends)
+force a device->host transfer; under ``jax.jit`` they either fail on tracers
+or, worse, silently bake a blocking sync into every step.  The rule walks
+every function reachable from a jit root (see ``repro.lint.callgraph``) and
+flags:
+
+* universal sins anywhere reachable: ``.item()``, ``.tolist()``,
+  ``jax.device_get``, ``np.asarray`` / ``np.array`` / ``np.copy``;
+* ``float(x)`` / ``int(x)`` / ``bool(x)`` on a traced *parameter* — only in
+  root functions (a non-root helper may legitimately coerce static config).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.lint.callgraph import dotted
+from repro.lint.framework import Finding, Project, rule
+
+_METHOD_SINS = {"item", "tolist"}
+_NP_SINS = {"asarray", "array", "copy"}
+_CAST_SINS = {"float", "int", "bool"}
+
+
+def _numpy_aliases(graph, module: str) -> set:
+    return {alias for alias, mod in graph.mod_aliases.get(module, {}).items()
+            if mod == "numpy"}
+
+
+def _is_device_get(graph, module: str, call: ast.Call) -> bool:
+    d = dotted(call.func)
+    if d in ("jax.device_get",):
+        return True
+    if d == "device_get":
+        return graph.from_imports.get(module, {}).get("device_get",
+                                                      ("",))[0] == "jax"
+    return False
+
+
+def _body_nodes(fn_node: ast.AST):
+    """Walk a function body without descending into nested defs (they are
+    separate call-graph nodes and get scanned on their own)."""
+    stack = list(getattr(fn_node, "body", []))
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            stack.append(child)
+
+
+@rule("RL001", "host sync (.item()/device_get/np.asarray/float(tracer)) "
+               "reachable from a jit/scan/pallas root")
+def check(project: Project) -> List[Finding]:
+    graph = project.callgraph
+    out: List[Finding] = []
+    by_rel = {ctx.relpath: ctx for ctx in project.files.values()}
+    for fn in graph.reachable_nodes():
+        ctx = by_rel.get(fn.relpath)
+        if ctx is None:
+            continue
+        np_aliases = _numpy_aliases(graph, fn.module)
+        tainted = (set(fn.params()) - fn.static_params) if fn.is_root else set()
+        why = fn.root_reasons[0] if fn.root_reasons else "called from jit"
+        for node in _body_nodes(fn.node):
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Attribute):
+                if node.func.attr in _METHOD_SINS and not node.args:
+                    out.append(ctx.finding(
+                        "RL001", node,
+                        f".{node.func.attr}() in `{fn.qualname}` ({why}): "
+                        f"blocks on a device value inside traced code"))
+                    continue
+                if (isinstance(node.func.value, ast.Name)
+                        and node.func.value.id in np_aliases
+                        and node.func.attr in _NP_SINS):
+                    out.append(ctx.finding(
+                        "RL001", node,
+                        f"np.{node.func.attr}() in `{fn.qualname}` ({why}): "
+                        f"materializes a tracer on the host"))
+                    continue
+            if _is_device_get(graph, fn.module, node):
+                out.append(ctx.finding(
+                    "RL001", node,
+                    f"jax.device_get in `{fn.qualname}` ({why}): "
+                    f"device->host transfer inside traced code"))
+                continue
+            if (fn.is_root and isinstance(node.func, ast.Name)
+                    and node.func.id in _CAST_SINS and len(node.args) == 1
+                    and isinstance(node.args[0], ast.Name)
+                    and node.args[0].id in tainted):
+                out.append(ctx.finding(
+                    "RL001", node,
+                    f"{node.func.id}({node.args[0].id}) on a traced argument "
+                    f"of jit root `{fn.qualname}`: concretizes a tracer"))
+    return out

@@ -1,0 +1,107 @@
+"""RL002 — unseeded randomness.
+
+The repo's replay claims (``round_plan(rnd)`` from ``(seed, round)`` alone,
+bit-identical reruns) die the moment any code path draws from global RNG
+state.  Flags:
+
+* ``np.random.<sampler>(...)`` — the legacy global-state API (including
+  ``np.random.seed``: global seeding is still shared mutable state);
+* ``np.random.default_rng()`` / ``Generator``/``PCG64``/... constructors
+  called with **no** seed argument;
+* stdlib ``random.<fn>(...)`` module-level calls (``random.Random(seed)``
+  instances are fine);
+* ``jax.random.PRNGKey()`` with no arguments.
+
+Exempt: ``faults/model.py`` (the counter-PRNG implementation itself) and
+anything under ``tests/``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.lint.callgraph import dotted
+from repro.lint.framework import Finding, Project, rule
+
+# numpy.random constructors that are fine *when given a seed*
+_SEEDED_CTORS = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                 "Philox", "MT19937", "SFC64", "BitGenerator", "RandomState"}
+
+
+def _exempt(relpath: str) -> bool:
+    if "lint_fixtures" in relpath:  # the linter's own test corpus IS linted
+        return False
+    return (relpath.endswith("faults/model.py")
+            or relpath.startswith("tests/")
+            or "/tests/" in relpath)
+
+
+def _alias_of(ctx_module, graph, module: str, target: str) -> set:
+    return {alias for alias, mod in graph.mod_aliases.get(module, {}).items()
+            if mod == target}
+
+
+@rule("RL002", "unseeded randomness (np.random.*, stdlib random, argless "
+               "PRNGKey) outside faults/model.py and tests")
+def check(project: Project) -> List[Finding]:
+    graph = project.callgraph
+    out: List[Finding] = []
+    for ctx in project.files.values():
+        if _exempt(ctx.relpath):
+            continue
+        np_aliases = _alias_of(ctx, graph, ctx.module, "numpy")
+        rand_aliases = _alias_of(ctx, graph, ctx.module, "random")
+        froms = graph.from_imports.get(ctx.module, {})
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func)
+            if d is None:
+                continue
+            parts = d.split(".")
+            has_args = bool(node.args or node.keywords)
+            # numpy.random.*
+            if len(parts) >= 3 and parts[0] in np_aliases and parts[1] == "random":
+                name = parts[2]
+                if name in _SEEDED_CTORS:
+                    if not has_args:
+                        out.append(ctx.finding(
+                            "RL002",
+                            node, f"np.random.{name}() without a seed: "
+                                  f"draws from OS entropy, run is not replayable"))
+                else:
+                    out.append(ctx.finding(
+                        "RL002", node,
+                        f"np.random.{name}: global-state RNG; use "
+                        f"np.random.default_rng(seed)"))
+                continue
+            # from numpy import random as npr -> npr.rand(...)
+            if len(parts) == 2 and froms.get(parts[0]) == ("numpy", "random"):
+                name = parts[1]
+                if name in _SEEDED_CTORS and has_args:
+                    continue
+                out.append(ctx.finding(
+                    "RL002", node,
+                    f"numpy.random.{name}: global-state or unseeded RNG"))
+                continue
+            # stdlib random module
+            if len(parts) == 2 and parts[0] in rand_aliases:
+                if parts[1] in ("Random", "SystemRandom") and has_args:
+                    continue
+                out.append(ctx.finding(
+                    "RL002", node,
+                    f"random.{parts[1]}: stdlib global-state RNG; seed an "
+                    f"explicit random.Random(seed)"))
+                continue
+            # argless jax.random.PRNGKey()
+            tail = parts[-1]
+            if tail in ("PRNGKey", "key") and not node.args and not node.keywords:
+                is_jax = (d in ("jax.random.PRNGKey", "jax.random.key")
+                          or froms.get(parts[0], ("",))[0] == "jax.random"
+                          or (len(parts) == 1
+                              and froms.get(tail, ("",))[0] == "jax.random"))
+                if is_jax:
+                    out.append(ctx.finding(
+                        "RL002", node,
+                        f"jax.random.{tail}() with no seed argument"))
+    return out

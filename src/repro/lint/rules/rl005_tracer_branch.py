@@ -1,0 +1,126 @@
+"""RL005 — Python branching on tracer-typed names in jitted scopes.
+
+``if x > 0:`` inside a ``@jax.jit`` function raises a
+``TracerBoolConversionError`` at trace time — but only on the code path that
+actually executes, so an untested branch ships the bug.  The rule taints the
+parameters of every jit *root* (minus declared ``static_argnames``),
+propagates taint through simple assignments, and flags ``if``/``while``
+tests that concretize a tainted name.
+
+Not flagged (all trace-safe):
+* ``x.shape`` / ``x.ndim`` / ``x.dtype`` / ``x.size`` / ``len(x)`` —
+  static metadata;
+* ``x is None`` / ``x is not None`` — an optional-argument check (tracers
+  are never None);
+* branches on closure/config values — only root *parameters* seed taint.
+
+Non-root helpers are not analyzed: their arguments routinely mix tracers
+with static config, and a name-based pass can't tell them apart.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.lint.framework import Finding, Project, rule
+
+_META_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "weak_type"}
+
+
+def _is_none_check(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Compare)
+            and all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops)
+            and any(isinstance(c, ast.Constant) and c.value is None
+                    for c in node.comparators))
+
+
+def _offending_names(test: ast.AST, tainted: Set[str]) -> List[ast.Name]:
+    """Tainted Name loads in ``test`` that would concretize a tracer."""
+    hits: List[ast.Name] = []
+
+    def walk(node):
+        if _is_none_check(node):
+            return
+        if isinstance(node, ast.Attribute) and node.attr in _META_ATTRS:
+            return  # x.shape[...] etc — static under trace
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in ("len", "isinstance",
+                                                    "getattr", "hasattr"):
+                return
+            if isinstance(f, ast.Attribute) and f.attr in _META_ATTRS:
+                return
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load) \
+                and node.id in tainted:
+            hits.append(node)
+            return
+        for child in ast.iter_child_nodes(node):
+            walk(child)
+
+    walk(test)
+    return hits
+
+
+def _mentions_taint(expr: ast.AST, tainted: Set[str]) -> bool:
+    return bool(_offending_names(expr, tainted))
+
+
+def _body_nodes(fn_node: ast.AST):
+    """Walk a function body without descending into nested defs — those are
+    their own call-graph nodes (and, for jit factories, their own roots)."""
+    stack = list(getattr(fn_node, "body", []))
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            stack.append(child)
+
+
+def _propagate(fn_node: ast.AST, tainted: Set[str]) -> Set[str]:
+    """Two fixed passes of ``y = f(tainted)`` => ``y`` tainted (statement
+    order, no joins — cheap and good enough for step-function bodies)."""
+    for _ in range(2):
+        for node in _body_nodes(fn_node):
+            value = None
+            targets = []
+            if isinstance(node, ast.Assign):
+                value, targets = node.value, node.targets
+            elif isinstance(node, ast.AugAssign):
+                value, targets = node.value, [node.target]
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                value, targets = node.value, [node.target]
+            if value is None or not _mentions_taint(value, tainted):
+                continue
+            for t in targets:
+                for sub in ast.walk(t):
+                    if isinstance(sub, ast.Name):
+                        tainted.add(sub.id)
+    return tainted
+
+
+@rule("RL005", "Python if/while on a tracer-typed name inside a jit root")
+def check(project: Project) -> List[Finding]:
+    graph = project.callgraph
+    out: List[Finding] = []
+    by_rel = {ctx.relpath: ctx for ctx in project.files.values()}
+    for fn in graph.root_nodes():
+        ctx = by_rel.get(fn.relpath)
+        if ctx is None or isinstance(fn.node, ast.Lambda):
+            continue
+        tainted = set(fn.params()) - fn.static_params
+        if not tainted:
+            continue
+        tainted = _propagate(fn.node, tainted)
+        why = fn.root_reasons[0] if fn.root_reasons else "jit root"
+        for node in _body_nodes(fn.node):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            for name in _offending_names(node.test, tainted):
+                out.append(ctx.finding(
+                    "RL005", node,
+                    f"branch on `{name.id}` in `{fn.qualname}` ({why}): "
+                    f"concretizes a tracer at trace time; use jnp.where/"
+                    f"lax.cond or declare it static"))
+    return out

@@ -128,6 +128,17 @@ class Tracer:
         return (time.perf_counter_ns() - self.epoch_ns) / 1e3
 
 
+def wall_s() -> float:
+    """Monotonic host wall clock in seconds.
+
+    The one sanctioned host-time call outside this module: training loops and
+    launch tooling time compile/step phases through here so measured wall
+    clocks share a clock source with the trace epoch (``repro.lint`` rule
+    RL003 rejects raw ``time.*`` calls elsewhere in ``src/repro``).
+    """
+    return time.perf_counter()
+
+
 # ---------------------------------------------------------------------------
 # module state: one default tracer + the enable flag everything checks
 # ---------------------------------------------------------------------------

@@ -1,7 +1,6 @@
 """Host-side training loop: data feed, jit'd step, metrics, checkpoints."""
 from __future__ import annotations
 
-import time
 from typing import Callable, Iterator, Optional
 
 import jax
@@ -95,7 +94,7 @@ def train(cfg: ModelConfig, tc: TrainConfig, batches: Iterator[dict],
                  tc.sync.faults.seed)
 
     history = []
-    t0 = time.time()
+    t0 = obs_trace.wall_s()
     for step in range(steps):
         tracing = obs_trace.enabled()
         # round boundary: the span covers batch staging + step dispatch, but
@@ -135,7 +134,7 @@ def train(cfg: ModelConfig, tc: TrainConfig, batches: Iterator[dict],
                 registry.observe_train_step(step, vals)
                 log_kv(log, "round", step=step, **vals)
             if log_step:
-                dt = time.time() - t0
+                dt = obs_trace.wall_s() - t0
                 log.info("step %4d loss %.4f grad_norm %.3f (%.2fs)",
                          step, float(fetched["loss"]),
                          float(fetched["grad_norm"]), dt)

@@ -1,0 +1,20 @@
+"""RL001 fixture: host synchronization inside jit-traced code."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    lo = x.min().item()          # RL001: .item() forces a device sync
+    host = np.asarray(x)         # RL001: np.asarray materializes on host
+    return x - lo + host.sum()
+
+
+def scan_body(carry, x):
+    probe = jax.device_get(carry)  # RL001: reachable via lax.scan below
+    return carry + x, probe
+
+
+def run(xs):
+    return jax.lax.scan(scan_body, jnp.zeros(()), xs)

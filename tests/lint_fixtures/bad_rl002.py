@@ -1,0 +1,7 @@
+"""RL002 fixture: unseeded randomness."""
+import numpy as np
+
+
+def noisy(shape):
+    g = np.random.default_rng()      # RL002: argless default_rng
+    return np.random.randn(*shape) + g.standard_normal(shape)  # RL002

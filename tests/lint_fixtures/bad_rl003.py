@@ -1,0 +1,8 @@
+"""RL003 fixture: raw wall-clock reads outside the sanctioned modules."""
+import time
+
+
+def measure(fn):
+    t0 = time.time()                 # RL003: use repro.obs.trace.wall_s
+    fn()
+    return time.perf_counter() - t0  # RL003

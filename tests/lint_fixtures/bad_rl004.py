@@ -1,0 +1,9 @@
+"""RL004 fixture: ledger records with missing or unregistered tags."""
+from repro.comm.ledger import CommLedger
+
+
+def account(nbytes):
+    led = CommLedger()
+    led.record(0, "a->b", nbytes, kind="inter", phase=0)  # RL004: no tag
+    led.record(1, "a->b", nbytes, tag="bogus_tag")        # RL004: unregistered
+    return led

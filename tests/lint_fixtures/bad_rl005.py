@@ -1,0 +1,11 @@
+"""RL005 fixture: Python branching on a traced value inside jit."""
+import jax
+
+
+@jax.jit
+def clip_positive(x):
+    if x > 0:                        # RL005: x is a tracer here
+        return x
+    while x < 0:                     # RL005
+        x = x + 1
+    return x

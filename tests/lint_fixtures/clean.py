@@ -1,0 +1,17 @@
+"""A fixture with zero findings: seeded RNG, tagged records, no host sync."""
+import jax
+import numpy as np
+
+from repro.comm.ledger import UPLOAD_TAG, CommLedger
+
+
+@jax.jit
+def step(x):
+    return x - x.min()
+
+
+def noisy(shape, seed=0):
+    g = np.random.default_rng(seed)
+    led = CommLedger()
+    led.record(0, "a->b", 128, kind="inter", tag=UPLOAD_TAG)
+    return g.standard_normal(shape), led

@@ -1,0 +1,22 @@
+"""Same violations as the bad_* fixtures, each suppressed in place."""
+import time
+
+import jax
+import numpy as np
+
+from repro.comm.ledger import CommLedger
+
+
+@jax.jit
+def step(x):
+    lo = x.min().item()  # repro: noqa[RL001]
+    if x > 0:  # repro: noqa[RL005]
+        return x - lo
+    return x
+
+
+def noisy(shape):
+    t0 = time.time()  # repro: noqa[RL003]
+    led = CommLedger()
+    led.record(0, "a->b", 128)  # repro: noqa[RL004]
+    return np.random.randn(*shape), t0, led  # repro: noqa[RL002]

@@ -1,0 +1,124 @@
+"""repro.lint: AST rules, noqa/baseline plumbing, and contract checks."""
+import json
+import os
+
+import pytest
+
+from repro.lint.__main__ import main as lint_main
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+FIXTURES = os.path.join(REPO, "tests", "lint_fixtures")
+
+
+def run_lint(*paths, extra=()):
+    """In-process CLI run; returns (rc, findings-as-dicts)."""
+    argv = [os.path.join(FIXTURES, p) for p in paths]
+    argv += ["--format", "json", "--no-contracts", *extra]
+    import io
+    from contextlib import redirect_stdout
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        rc = lint_main(argv)
+    return rc, json.loads(buf.getvalue())["findings"]
+
+
+# ---------------------------------------------------------------------------
+# engine 1: each rule catches its fixture
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fixture,rule,n_min", [
+    ("bad_rl001.py", "RL001", 3),
+    ("bad_rl002.py", "RL002", 2),
+    ("bad_rl003.py", "RL003", 2),
+    ("bad_rl004.py", "RL004", 2),
+    ("bad_rl005.py", "RL005", 2),
+])
+def test_rule_catches_fixture(fixture, rule, n_min):
+    rc, findings = run_lint(fixture)
+    assert rc == 1
+    assert len(findings) >= n_min
+    assert all(f["rule"] == rule for f in findings)
+
+
+def test_rl001_sees_through_scan_callgraph():
+    # device_get lives in scan_body, a root only via lax.scan(scan_body, ...)
+    _, findings = run_lint("bad_rl001.py")
+    assert any("scan_body" in f["message"] for f in findings)
+
+
+def test_rl004_names_known_tags():
+    _, findings = run_lint("bad_rl004.py")
+    unregistered = [f for f in findings if "bogus_tag" in f["message"]]
+    assert len(unregistered) == 1
+    assert "retry" in unregistered[0]["message"]
+
+
+def test_noqa_suppresses_each_rule():
+    rc, findings = run_lint("noqa_ok.py")
+    assert rc == 0 and findings == []
+
+
+def test_clean_fixture_passes():
+    rc, findings = run_lint("clean.py")
+    assert rc == 0 and findings == []
+
+
+def test_fixture_dir_rule_filter():
+    rc, findings = run_lint(".", extra=("--rules", "RL002"))
+    assert rc == 1
+    assert {f["rule"] for f in findings} == {"RL002"}
+
+
+def test_unknown_rule_is_usage_error():
+    rc, _findings_unused = None, None
+    import io
+    from contextlib import redirect_stdout, redirect_stderr
+    buf = io.StringIO()
+    with redirect_stdout(buf), redirect_stderr(buf):
+        rc = lint_main([FIXTURES, "--rules", "RL999", "--no-contracts"])
+    assert rc == 2
+
+
+# ---------------------------------------------------------------------------
+# the repo itself lints clean with the committed (empty) baseline
+# ---------------------------------------------------------------------------
+def test_repo_is_lint_clean():
+    import io
+    from contextlib import redirect_stdout
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        rc = lint_main([os.path.join(REPO, "src", "repro"),
+                        os.path.join(REPO, "benchmarks"),
+                        "--format", "json", "--no-contracts"])
+    doc = json.loads(buf.getvalue())
+    assert rc == 0, doc["findings"]
+    assert doc["findings"] == [] and doc["baselined"] == 0
+
+
+def test_committed_baseline_is_empty():
+    from repro import lint as lint_pkg
+    path = os.path.join(os.path.dirname(lint_pkg.__file__), "baseline.json")
+    with open(path) as f:
+        assert json.load(f) == {"fingerprints": []}
+
+
+# ---------------------------------------------------------------------------
+# engine 2: contracts cover the full compressor registry and pass
+# ---------------------------------------------------------------------------
+def test_contract_params_cover_registry():
+    from repro.core.compressors import _REGISTRY
+    from repro.lint.contracts import CONTRACT_PARAMS
+    assert set(CONTRACT_PARAMS) == set(_REGISTRY)
+
+
+def test_retry_tag_constants_agree():
+    # faults.transmit mirrors the ledger constant instead of importing it
+    # (comm.tree -> faults.model would make that import circular)
+    from repro.comm.ledger import RETRY_TAG as ledger_tag
+    from repro.faults.transmit import RETRY_TAG as transmit_tag
+    assert ledger_tag == transmit_tag
+
+
+def test_contracts_pass():
+    from repro.lint.contracts import run_contracts
+    findings = run_contracts()
+    assert findings == [], [f.format() for f in findings]
