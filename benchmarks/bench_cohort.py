@@ -1,0 +1,265 @@
+"""Cohort-simulator benchmark: million-client populations, jitted rounds.
+
+Sweeps population x cohort x link-class mix on ``edge_fl_tree`` and pins the
+three properties the cohort engine exists for:
+
+* a full federated round over >= 10^5 sampled clients — broadcast, bucketed
+  FLIX local steps, per-class compressed uplink, the whole anchor cascade —
+  runs as ONE jitted sweep (the headline ``round_pop1e6_c1e5`` row, kept at
+  full size even under ``BENCH_SMOKE=1``);
+* memory scales with the cohort, never the population: staged host bytes and
+  retained device bytes are identical across a 10x population change at a
+  fixed cohort, and grow with the cohort (``mem_*`` rows, asserted);
+* bytes are attributed analytically per link class x level and certified
+  against a materialized small-N payload oracle (``ledger_oracle`` row,
+  asserted byte-exact), with the 16-leaf engine bitwise-identical to the
+  per-client ``tree_param_sync`` loop (``bitident16`` row, asserted).
+
+Byte-bearing rows use availability/drop faults only — pure counter-PRNG
+threshold draws, so survivor counts (and therefore bytes) are exact across
+platforms; straggler/deadline processes go through libm exp/log and could
+flip borderline survivors between CI machines.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (device_live_bytes, host_peak_rss_mb, now_s,
+                               timed)
+from repro.cohort import (CohortEngine, LinkClass, Population,
+                          flix_local_step, materialized_round_bytes)
+from repro.comm.topology import Link
+from repro.comm.tree import TreeLevel, TreeTopology, register_tree_topology
+from repro.core import distributed as dist
+from repro.faults import FaultConfig
+
+# availability + drop only: analytic bytes stay platform-exact (see module
+# docstring)
+BYTE_FAULTS = FaultConfig(seed=11, availability=0.9, drop_rate=0.05)
+
+
+def _smoke() -> bool:
+    return os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+
+# ---------------------------------------------------------------------------
+# headline: one jitted round over 1e5 clients from a 1e6 population
+# ---------------------------------------------------------------------------
+def _headline_rows():
+    pop = Population(n_clients=1_000_000, dim=32)
+    eng = CohortEngine(pop, cohort_size=100_000, fault_config=BYTE_FAULTS)
+    state = eng.init_state()
+    t0 = now_s()
+    state, rep = eng.round(state, 0)              # includes jit compile
+    compile_s = now_s() - t0
+
+    holder = {"state": state, "rnd": 1}
+
+    def one_round():
+        holder["state"], holder["rep"] = eng.round(holder["state"],
+                                                   holder["rnd"])
+        holder["rnd"] += 1
+
+    us = timed(one_round, repeats=3, warmup=1)
+    rep = holder["rep"]
+    return [
+        ("cohort/round_pop1e6_c1e5", us,
+         f"bytes={rep.bytes.total_bytes};parts={rep.n_participants};"
+         f"compile_s={compile_s:.1f};tdist={rep.metrics['target_dist']:.4f};"
+         f"peak_rss_mb={host_peak_rss_mb():.0f}"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# memory: O(cohort), not O(population)
+# ---------------------------------------------------------------------------
+def _mem_round(n_pop: int, cohort: int):
+    pop = Population(n_clients=n_pop, dim=32)
+    eng = CohortEngine(pop, cohort_size=cohort)
+    before = device_live_bytes()
+    state, rep = eng.round(eng.init_state(), 0)
+    jax.block_until_ready(state.anchors[-1]["x"])
+    retained = device_live_bytes() - before
+    return rep.staged_nbytes, retained
+
+
+def _mem_rows():
+    cohort = 2_000
+    staged_a, dev_a = _mem_round(100_000, cohort)
+    staged_b, dev_b = _mem_round(1_000_000, cohort)
+    # 10x the population, identical footprint: every staged/retained array is
+    # shaped by the cohort (clients exist only while sampled)
+    assert staged_a == staged_b, (staged_a, staged_b)
+    assert dev_a == dev_b, (dev_a, dev_b)
+    staged_c, dev_c = _mem_round(1_000_000, 4 * cohort)
+    # per-round arrays are O(cohort); the device state retained BETWEEN
+    # rounds is the anchor cascade — O(tree infrastructure), so it does not
+    # grow with the cohort either (stateless clients leave nothing behind)
+    assert staged_c > 3 * staged_a, (staged_c, staged_a)
+    assert dev_c == dev_a, (dev_c, dev_a)
+    return [
+        ("cohort/mem_pop_invariant", 0.0,
+         f"staged_pop1e5={staged_a};staged_pop1e6={staged_b};"
+         f"dev_pop1e5={dev_a};dev_pop1e6={dev_b};equal=True"),
+        ("cohort/mem_cohort_scaling", 0.0,
+         f"staged_c2k={staged_a};staged_c8k={staged_c};"
+         f"dev_retained_c2k={dev_a};dev_retained_c8k={dev_c};"
+         f"peak_rss_mb={host_peak_rss_mb():.0f}"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness: 16-leaf engine == per-client tree_param_sync loop
+# ---------------------------------------------------------------------------
+def _bitident_pop() -> Population:
+    register_tree_topology(TreeTopology("cohort_bitident16", (
+        TreeLevel("uplink", 4, Link(gbps=0.00625, latency_us=50_000.0)),
+        TreeLevel("metro", 2, Link(gbps=1.0, latency_us=2_000.0)),
+        TreeLevel("wan", 2, Link(gbps=1.0, latency_us=20_000.0)),
+    )))
+    only = (LinkClass("only", 1.0, Link(gbps=0.00625, latency_us=50_000.0),
+                      compressor="top_k", compress_ratio=0.25),)
+    return Population(n_clients=5_000, dim=32, tree="cohort_bitident16",
+                      classes=only)
+
+
+def _client_local(xi, target, alpha, m, lr):
+    """One client's local steps, scanned independently (the per-client
+    reference the engine's vectorized bucketed sweep must reproduce)."""
+    def body(x, _):
+        return flix_local_step(x, target, alpha, lr), None
+    xi, _ = jax.lax.scan(body, xi, None, length=int(m))
+    return xi
+
+
+def reference_round(eng: CohortEngine, state, rnd: int):
+    """The per-client loop: materialize every sampled client, run its local
+    steps one client at a time, then one direct ``tree_param_sync`` call."""
+    ids = eng.round_cohort(rnd)
+    spec = eng.pop.client_spec(ids)
+    plan = eng.round_plan(rnd, ids, spec.class_ids)
+    smasks = plan.survivor_masks() if plan is not None else None
+    masks = (tuple(jnp.asarray(m) for m in smasks)
+             if smasks is not None else None)
+    x0 = jnp.repeat(state.anchors[0]["x"], eng.cascade[0].fanout, axis=0)
+    rows = [_client_local(x0[i], jnp.asarray(spec.targets[i]),
+                          jnp.float32(spec.flix_alpha[i]),
+                          spec.n_samples[i], eng.lr)
+            for i in range(x0.shape[0])]
+    _, new_state = dist.tree_param_sync(
+        eng.round_key(rnd), {"x": jnp.stack(rows)}, state, eng.cascade,
+        bucket_size=eng.pop.dim, survivors=masks)
+    return new_state
+
+
+def _bitident_rows():
+    pop = _bitident_pop()
+    results = []
+    for label, cfg in (("nofault", None),
+                       ("faulted", FaultConfig(seed=3, availability=0.7,
+                                               drop_rate=0.1))):
+        eng = CohortEngine(pop, cohort_size=16, fault_config=cfg)
+        se, sr = eng.init_state(), eng.init_state()
+        for rnd in range(3):
+            se, rep = eng.round(se, rnd)
+            sr = reference_round(eng, sr, rnd)
+            for l, (a, b) in enumerate(zip(se.anchors, sr.anchors)):
+                ae, ar = np.asarray(a["x"]), np.asarray(b["x"])
+                assert ae.tobytes() == ar.tobytes(), (label, rnd, l)
+        results.append((label, rep))
+    return [
+        ("cohort/bitident16", 0.0,
+         f"bytes={results[0][1].bytes.total_bytes};rounds=3;bitwise=True;"
+         f"faulted_parts={results[1][1].n_participants}"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# ledger: analytic attribution == materialized payload oracle
+# ---------------------------------------------------------------------------
+def _oracle_rows():
+    pop = Population(n_clients=50_000, dim=32)
+    eng = CohortEngine(pop, cohort_size=80, fault_config=BYTE_FAULTS)
+    state = eng.init_state()
+    checked = 0
+    for rnd in range(2):
+        state, rep = eng.round(state, rnd)
+        smasks = (rep.plan.survivor_masks()
+                  if rep.plan is not None else None)
+        oracle = materialized_round_bytes(
+            rnd, rep.class_ids, pop.classes, eng.upper_compressors,
+            eng.tree, pop.dim, smasks)
+        assert rep.bytes.total_bytes == oracle, (rnd, rep.bytes, oracle)
+        checked += 1
+    by_level = rep.bytes.by_level(eng.tree)
+    lv = ";".join(f"{k}={v}" for k, v in by_level.items())
+    return [
+        ("cohort/ledger_oracle_n80", 0.0,
+         f"bytes={rep.bytes.total_bytes};rounds={checked};exact=True;{lv}"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# bucketing: padded scan work vs max-padding
+# ---------------------------------------------------------------------------
+def _bucket_rows():
+    pop = Population(n_clients=1_000_000, dim=32)
+    eng = CohortEngine(pop, cohort_size=20_000)
+    spec = pop.client_spec(eng.round_cohort(0))
+    cb = eng.buckets(spec.n_samples)
+    maxpad = eng.cohort_size * pop.samples_max
+    ratio = cb.padded_steps / maxpad
+    assert ratio < 1.0, ratio
+    return [
+        ("cohort/bucket_speedup", 0.0,
+         f"padded_steps={cb.padded_steps};maxpad={maxpad};"
+         f"work_ratio={ratio:.3f};buckets={len(cb.boundaries)}"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# sweep: population x cohort x class mix
+# ---------------------------------------------------------------------------
+def _sweep_rows():
+    grid = [(200_000, 2_000), (1_000_000, 2_000)]
+    if not _smoke():
+        grid += [(1_000_000, 20_000)]
+    rows = []
+    for n_pop, cohort in grid:
+        pop = Population(n_clients=n_pop, dim=32)
+        eng = CohortEngine(pop, cohort_size=cohort,
+                           fault_config=BYTE_FAULTS)
+        state, rep = eng.round(eng.init_state(), 0)
+        holder = {"s": state, "r": 1}
+
+        def one(eng=eng, holder=holder):
+            holder["s"], _ = eng.round(holder["s"], holder["r"])
+            holder["r"] += 1
+
+        us = timed(one, repeats=3, warmup=0)
+        mix = ",".join(str(c) for c in pop.class_mix_counts(rep.cohort_ids))
+        rows.append((f"cohort/sweep_pop{n_pop//1000}k_c{cohort//1000}k", us,
+                     f"bytes={rep.bytes.total_bytes};"
+                     f"parts={rep.n_participants};mix={mix}"))
+    return rows
+
+
+def run():
+    rows = []
+    rows += _bitident_rows()
+    rows += _oracle_rows()
+    rows += _bucket_rows()
+    rows += _sweep_rows()
+    rows += _mem_rows()
+    rows += _headline_rows()
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

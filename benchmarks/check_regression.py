@@ -29,7 +29,8 @@ BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "baselines")
 DEFAULT_PAIRS = (("BENCH_comm.json", "BENCH_comm.json"),
                  ("BENCH_hier.json", "BENCH_hier.json"),
-                 ("BENCH_faults.json", "BENCH_faults.json"))
+                 ("BENCH_faults.json", "BENCH_faults.json"),
+                 ("BENCH_cohort.json", "BENCH_cohort.json"))
 
 
 def load_rows(path: str) -> dict:
@@ -60,7 +61,8 @@ def diff(current: dict, baseline: dict, bytes_tol: float,
                 f"time cliff {name}: {b_us:.1f}us -> {c_us:.1f}us "
                 f"(> {time_ratio:.0f}x baseline)")
     for name in sorted(set(current) - set(baseline)):
-        notes.append(f"new row (not in baseline): {name}")
+        notes.append(f"NEW row {name!r}: no baseline yet — not a failure; "
+                     "commit the refreshed baseline file to pin it")
     return failures, notes
 
 
@@ -74,6 +76,13 @@ def check_pair(cur_path: str, base_path: str, bytes_tol: float,
         fail = f"{label}: current file {cur_path} not found (vs {base_path})"
         print(f"FAIL {fail}")
         return [fail]
+    if not os.path.exists(base_path):
+        # a brand-new bench has nothing to regress against: report clearly
+        # instead of crashing with a bare missing-file traceback
+        n_rows = len(load_rows(cur_path))
+        print(f"NEW {label}: {n_rows} row(s), no baseline at {base_path} — "
+              "commit one to start pinning this bench")
+        return []
     failures, notes = diff(load_rows(cur_path), load_rows(base_path),
                            bytes_tol, time_ratio)
     for n in notes:

@@ -77,3 +77,38 @@ def timed(fn: Callable, repeats: int = 3, warmup: int = 1,
 def emit(rows: List[Row]) -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+# memory probes — is a bench O(cohort) or O(population)?
+# ---------------------------------------------------------------------------
+def device_live_bytes() -> int:
+    """Total bytes of live device arrays right now.
+
+    Deterministic (sums ``jax.live_arrays()`` buffer sizes, no allocator
+    statistics), so scaling assertions on it are CI-stable: run a workload,
+    diff before/after, and the delta is exactly the bytes the workload left
+    alive."""
+    import jax
+
+    return int(sum(a.nbytes for a in jax.live_arrays()))
+
+
+def host_peak_rss_mb() -> float:
+    """Peak resident set size of this process in MiB (monotonic high-water
+    mark — report it per row, don't diff it)."""
+    import resource
+    import sys
+
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    # linux reports KiB, macOS bytes
+    return peak / 1024.0 if sys.platform != "darwin" else peak / (1024.0**2)
+
+
+def mem_probe(fn: Callable) -> Tuple[object, int]:
+    """Run ``fn`` and return ``(result, device_bytes_delta)`` — the device
+    memory its live results retain.  Pair with ``host_peak_rss_mb`` in the
+    derived column for per-row memory attribution."""
+    before = device_live_bytes()
+    out = fn()
+    return out, device_live_bytes() - before

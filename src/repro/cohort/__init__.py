@@ -1,0 +1,26 @@
+"""repro.cohort — vectorized million-client cohort simulation.
+
+``Population`` is the law of a client population (link classes, Dirichlet
+data skew, personalization mixes) evaluated lazily per client id;
+``CohortEngine`` runs whole federated rounds over sampled cohorts as single
+jitted sweeps, with per-class byte attribution (``CohortAccountant``)
+cross-checked against a materialized small-N oracle.
+"""
+from repro.cohort.accounting import (CohortAccountant, CohortRoundBytes,
+                                     materialized_round_bytes,
+                                     message_nbytes)
+from repro.cohort.engine import (CohortEngine, CohortRoundReport,
+                                 flix_local_step)
+from repro.cohort.population import (ClientSpecBatch, CohortBuckets,
+                                     LinkClass, Population,
+                                     bucket_boundaries, bucket_by_size,
+                                     bucket_capacities, cohort_compressor,
+                                     link_classes_from_tree, sample_cohort)
+
+__all__ = [
+    "CohortAccountant", "CohortRoundBytes", "materialized_round_bytes",
+    "message_nbytes", "CohortEngine", "CohortRoundReport", "flix_local_step",
+    "ClientSpecBatch", "CohortBuckets", "LinkClass", "Population",
+    "bucket_boundaries", "bucket_by_size", "bucket_capacities",
+    "cohort_compressor", "link_classes_from_tree", "sample_cohort",
+]

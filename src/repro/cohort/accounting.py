@@ -1,0 +1,175 @@
+"""Per-cohort byte attribution: analytic class formulas, oracle-checked.
+
+At 10^5 leaves, encoding every client's payload to count bytes would cost
+more than the round itself.  But every registered codec's wire size is a
+*deterministic* function of the input dimension — top-k keeps exactly
+ceil(ratio*d) coordinates, qsgd packs d values at a fixed bit width — so one
+probe encode per (class, level) yields an exact per-message byte count, and
+a cohort round's traffic is just
+
+    level 0:  sum_k  |survivors in class k| * class_k_message_bytes
+    level l:  |survivors at level l|       * level_l_message_bytes
+
+``materialized_round_bytes`` is the small-N oracle: it performs a real
+``codecs.encode`` per message and must agree byte-for-byte with the analytic
+attribution (the cross-check ``tests/test_cohort.py`` and ``bench_cohort``
+both assert).  Ledger records tag each level by name (registered by
+``TreeTopology``), with level-0 links split per link class.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.comm import codecs
+from repro.comm.ledger import CommLedger
+from repro.comm.tree import TreeTopology
+from repro.core.compressors import Compressor
+
+from repro.cohort.population import LinkClass
+
+
+def message_nbytes(c: Compressor, dim: int, key=None) -> int:
+    """Exact wire bytes of one dim-sized message through compressor ``c``.
+
+    Deterministic in ``dim`` for every registered compressor (plane shapes
+    depend only on the input size), so one probe encode prices every message
+    of the round.  ``dim`` must stay under the accounting probe cap — cohort
+    models are small vectors, so this is not a practical limit.
+    """
+    from repro.comm.accounting import PROBE_CAP
+
+    if dim > PROBE_CAP:
+        raise ValueError(f"dim {dim} exceeds the probe cap {PROBE_CAP}; "
+                         "per-message bytes would no longer be probe-exact")
+    key = key if key is not None else jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (dim,))
+    return int(codecs.encode(c, key, x).nbytes)
+
+
+@dataclass(frozen=True)
+class CohortRoundBytes:
+    """One cohort round's uplink traffic, attributed per level and class."""
+    round: int
+    leaf_class_counts: Tuple[int, ...]   # surviving leaves per link class
+    leaf_class_nbytes: Tuple[int, ...]   # total bytes per link class
+    upper_counts: Tuple[int, ...]        # surviving senders per upper level
+    upper_nbytes: Tuple[int, ...]        # total bytes per upper level
+
+    @property
+    def leaf_bytes(self) -> int:
+        return int(sum(self.leaf_class_nbytes))
+
+    @property
+    def total_bytes(self) -> int:
+        return self.leaf_bytes + int(sum(self.upper_nbytes))
+
+    def by_level(self, tree: TreeTopology) -> Dict[str, int]:
+        out = {tree.levels[0].name: self.leaf_bytes}
+        for lev, b in zip(tree.levels[1:], self.upper_nbytes):
+            out[lev.name] = int(b)
+        return out
+
+
+class CohortAccountant:
+    """Prices cohort rounds analytically and records them into a ledger."""
+
+    def __init__(self, tree: TreeTopology, classes: Sequence[LinkClass],
+                 upper_compressors: Sequence[Compressor], dim: int):
+        if len(upper_compressors) != len(tree.levels) - 1:
+            raise ValueError(
+                f"{len(upper_compressors)} upper compressors for "
+                f"{len(tree.levels) - 1} upper tree levels")
+        self.tree = tree
+        self.classes = tuple(classes)
+        self.dim = int(dim)
+        self.class_nbytes = tuple(
+            message_nbytes(lc.make_compressor(), dim) for lc in self.classes)
+        self.upper_nbytes = tuple(
+            message_nbytes(c, dim) for c in upper_compressors)
+
+    def uplink_time_s(self, class_ids: np.ndarray) -> np.ndarray:
+        """Per-leaf nominal uplink time: each class's payload on its link."""
+        times = np.array([lc.link.time_s(nb) for lc, nb in
+                          zip(self.classes, self.class_nbytes)])
+        return times[np.asarray(class_ids)]
+
+    def round_bytes(self, rnd: int, class_ids: np.ndarray,
+                    survivor_masks: Optional[Sequence[np.ndarray]]
+                    ) -> CohortRoundBytes:
+        """Analytic traffic of one round: class/level counts x message bytes.
+
+        ``survivor_masks`` is the per-level child mask tuple from the fault
+        plan (None = full participation).  Dead children send nothing — their
+        uplink attempt may have burned the physical channel, but the ledger
+        accounts *delivered* aggregation traffic, matching the oracle which
+        only encodes messages that reach a parent.
+        """
+        class_ids = np.asarray(class_ids)
+        n_levels = len(self.tree.levels)
+        if survivor_masks is None:
+            masks = [np.ones(self.tree.n_children(l), bool)
+                     for l in range(n_levels)]
+        else:
+            masks = [np.asarray(m) > 0 for m in survivor_masks]
+        counts = np.bincount(class_ids[masks[0]],
+                             minlength=len(self.classes))
+        return CohortRoundBytes(
+            round=rnd,
+            leaf_class_counts=tuple(int(c) for c in counts),
+            leaf_class_nbytes=tuple(int(c * nb) for c, nb in
+                                    zip(counts, self.class_nbytes)),
+            upper_counts=tuple(int(m.sum()) for m in masks[1:]),
+            upper_nbytes=tuple(int(m.sum()) * nb for m, nb in
+                               zip(masks[1:], self.upper_nbytes)),
+        )
+
+    def record(self, ledger: CommLedger, rb: CohortRoundBytes) -> None:
+        """Ledger the round: level-0 links split per class, tagged by level
+        name (``TreeTopology.__post_init__`` registered the tags)."""
+        leaf = self.tree.levels[0]
+        for lc, nb in zip(self.classes, rb.leaf_class_nbytes):
+            if nb:
+                ledger.record(rb.round, f"{leaf.name}->up/{lc.name}", nb,
+                              kind="inter", tag=leaf.name)
+        for lev, nb in zip(self.tree.levels[1:], rb.upper_nbytes):
+            if nb:
+                ledger.record(rb.round, f"{lev.name}->up", nb,
+                              kind="inter", tag=lev.name)
+
+
+def materialized_round_bytes(rnd: int, class_ids: np.ndarray,
+                             classes: Sequence[LinkClass],
+                             upper_compressors: Sequence[Compressor],
+                             tree: TreeTopology, dim: int,
+                             survivor_masks: Optional[Sequence[np.ndarray]]
+                             ) -> int:
+    """Small-N oracle: encode every delivered message for real, sum bytes.
+
+    O(cohort) codec calls — run it at N <= a few hundred to certify the
+    analytic attribution, never in the hot path.  Each message encodes a
+    per-sender probe vector (sizes are content-independent, so any vector of
+    the right dimension prices the message exactly).
+    """
+    class_ids = np.asarray(class_ids)
+    n_levels = len(tree.levels)
+    if survivor_masks is None:
+        masks = [np.ones(tree.n_children(l), bool) for l in range(n_levels)]
+    else:
+        masks = [np.asarray(m) > 0 for m in survivor_masks]
+    comps = [lc.make_compressor() for lc in classes]
+    total = 0
+    for i in np.flatnonzero(masks[0]):
+        key = jax.random.fold_in(jax.random.PRNGKey(rnd), int(i))
+        x = jax.random.normal(jax.random.fold_in(key, 1), (dim,))
+        total += int(codecs.encode(comps[int(class_ids[i])], key, x).nbytes)
+    for l, c in enumerate(upper_compressors, start=1):
+        for i in np.flatnonzero(masks[l]):
+            key = jax.random.fold_in(jax.random.PRNGKey(1000 * l + rnd),
+                                     int(i))
+            x = jax.random.normal(jax.random.fold_in(key, 1), (dim,))
+            total += int(codecs.encode(c, key, x).nbytes)
+    return total

@@ -1,0 +1,293 @@
+"""The cohort engine: one federated round over 10^5-10^6 clients, one jit.
+
+The per-client ``tree_param_sync`` loop is exact but materializes every
+client; cross-device rounds touch a *cohort* sampled from a population three
+orders of magnitude larger.  The engine runs the whole round — broadcast,
+per-client FLIX/Scafflix local steps, per-class compressed uplink, the full
+anchor cascade — as a single jitted sweep over stacked per-client state:
+
+* clients exist only while sampled (``sample_cohort`` Feistel ids +
+  ``Population.client_spec`` lane derivations), so host/device memory scales
+  with the cohort, never the population;
+* ragged local-step counts run as a few static-shape ``lax.scan``s over
+  tensor2tensor-style size buckets instead of one scan padded to the max;
+* heterogeneous link classes compress through ``tree_param_sync``'s
+  ``leaf_compress`` hook — a one-hot mixture of per-class fused compressor
+  passes — while metro/WAN levels run the stock cascade;
+* participation comes from ``FaultModel.round_plan`` addressed by the
+  sampled clients' *population* ids (``leaf_lanes``), so every round —
+  cohort, faults, and sweep noise — replays from ``(seed, round)`` alone.
+
+Semantics are the *stateless-client* cross-device model: a sampled client
+starts from its cell aggregator's anchor (clients keep no state between the
+rare rounds they are sampled).  With full participation this is bitwise
+identical to driving the per-client loop on the same cohort — the N=16
+bit-exactness gate in ``tests/test_cohort.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.ledger import CommLedger
+from repro.comm.tree import TreeTopology, get_tree_topology
+from repro.core import compressors as comp_lib
+from repro.core import distributed as dist
+from repro.core.compressors import Compressor
+from repro.core.distributed import CascadeLevel, TreeSyncState
+from repro.faults.model import FaultConfig, FaultModel, RoundFaultPlan
+
+from repro.cohort.accounting import CohortAccountant, CohortRoundBytes
+from repro.cohort.population import (CohortBuckets, Population,
+                                     bucket_boundaries, bucket_by_size,
+                                     bucket_capacities, cohort_compressor,
+                                     sample_cohort)
+
+
+def flix_local_step(x, target, alpha, lr):
+    """One FLIX/Scafflix local step on the quadratic client objective.
+
+    The client's personalized model is ``x~ = alpha*x + (1-alpha)*x_i*``
+    (Ch. 6's explicit mixture); its local loss ``0.5*||x~ - x_i*||^2`` has
+    gradient ``alpha*(x~ - x_i*)`` in ``x``, so the step contracts ``x``
+    toward the local optimum at rate ``lr * alpha^2`` — alpha=1 is pure
+    FedAvg-style local SGD, alpha -> 0 leaves the global model untouched
+    (a fully personalized client has nothing to learn from the server).
+    Elementwise, so the vectorized sweep and the per-client reference loop
+    produce bitwise-identical iterates.
+    """
+    x_t = alpha * x + (1.0 - alpha) * target
+    return x - lr * (alpha * (x_t - target))
+
+
+def _make_cohort_sweep(levels: Tuple[CascadeLevel, ...], dim: int,
+                       boundaries: Tuple[int, ...], lr: float,
+                       n_link_classes: int,
+                       class_compressors: Tuple[Compressor, ...]):
+    """Build the round sweep for ``jax.jit`` (jit factory idiom).
+
+    Everything shape-like — cascade levels, bucket boundaries/capacities,
+    link-class count — is closed over statically; per-round data (cohort
+    spec arrays, survivor masks, the round key) are traced arguments, so one
+    trace serves every round of a run.
+    """
+    mixed = n_link_classes > 1
+
+    def sweep(key, state, targets, alphas, steps, onehot, bidx, bvalid,
+              masks):
+        f0 = levels[0].fanout
+        # broadcast: every sampled client starts from its cell anchor
+        # (stateless-client semantics — see module docstring); in a depth-1
+        # cascade the only anchor is the unstacked root
+        a0 = state.anchors[0]["x"]
+        x = (jnp.repeat(a0[None], f0, axis=0) if a0.ndim == 1
+             else jnp.repeat(a0, f0, axis=0))
+
+        # ragged local training as static-shape scans, one per size bucket
+        a_col = alphas[:, None]
+        for b, boundary in enumerate(boundaries):
+            idx = bidx[b]
+            safe = jnp.clip(idx, 0, x.shape[0] - 1)
+            xb, tb = x[safe], targets[safe]
+            ab, mb = a_col[safe], steps[safe]
+
+            def local(xb, s, tb=tb, ab=ab, mb=mb):
+                nxt = flix_local_step(xb, tb, ab, lr)
+                return jnp.where((s < mb)[:, None], nxt, xb), None
+
+            xb, _ = jax.lax.scan(local, xb, jnp.arange(boundary))
+            # padded slots scatter out of bounds and are dropped
+            sidx = jnp.where(bvalid[b], safe, x.shape[0])
+            x = x.at[sidx].set(xb, mode="drop")
+
+        if mixed:
+            # per-class fused compression: each client's delta goes through
+            # its own link class's operator, blended by the one-hot class
+            # matrix (rows are one-hot, so this IS per-client dispatch)
+            def leaf_compress(keys, delta_b, d):
+                def per_class(core):
+                    out = jnp.zeros_like(core)
+                    for k, ck in enumerate(class_compressors):
+                        yk = jax.vmap(lambda kk, v, ck=ck: ck(kk, v))(keys,
+                                                                      core)
+                        out = out + onehot[:, k, None] * yk
+                    return out
+                return dist.fused_apply(per_class, delta_b, d)
+        else:
+            leaf_compress = None
+
+        new_x, new_state = dist.tree_param_sync(
+            key, {"x": x}, state, levels, bucket_size=dim,
+            survivors=masks, leaf_compress=leaf_compress)
+
+        d_local = x - targets
+        metrics = {
+            "target_dist": jnp.sqrt(jnp.mean(jnp.sum(d_local ** 2, axis=1))),
+            "root_norm": jnp.sqrt(jnp.sum(new_state.anchors[-1]["x"] ** 2)),
+        }
+        return new_state, metrics
+
+    return sweep
+
+
+@dataclass
+class CohortRoundReport:
+    """Everything one engine round produced besides the new state."""
+    round: int
+    cohort_ids: np.ndarray
+    class_ids: np.ndarray
+    bytes: CohortRoundBytes
+    plan: Optional[RoundFaultPlan]
+    staged_nbytes: int           # host bytes staged for the sweep (O(cohort))
+    padded_steps: int            # total scan work after bucketing
+    metrics: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def n_participants(self) -> int:
+        if self.plan is None:
+            return int(self.cohort_ids.shape[0])
+        return int(self.plan.levels[0].survivors.sum())
+
+
+class CohortEngine:
+    """A ``Population`` bound to a cohort size: rounds as jitted sweeps.
+
+    ``cohort_size`` leaves occupy ``pop.tree`` rescaled via
+    ``with_n_leaves``; the anchor cascade runs the population's per-class
+    compressors at the leaf hop and ``upper_compressors`` (default: dense
+    middle hops, 1% top-k on the WAN root hop) above, all
+    periods 1 — every round is a full cascade sync, the cross-device
+    regime where each round IS the communication event.
+    """
+
+    def __init__(self, pop: Population, cohort_size: int, lr: float = 0.1,
+                 fault_config: Optional[FaultConfig] = None,
+                 upper_compressors: Optional[Sequence[Compressor]] = None,
+                 ledger: Optional[CommLedger] = None, metrics=None):
+        self.pop = pop
+        self.cohort_size = int(cohort_size)
+        self.lr = float(lr)
+        self.ledger = ledger
+        self.metrics = metrics
+        base = get_tree_topology(pop.tree)
+        self.tree: TreeTopology = base.with_n_leaves(self.cohort_size)
+
+        if upper_compressors is None:
+            # middle hops ship the dense aggregate (fat metro fiber); the
+            # top (WAN) hop sparsifies hard — the Ch. 5 shape where each
+            # slower link carries a more compressed payload
+            upper_compressors = tuple(
+                cohort_compressor("top_k", 0.01, 8) if l == base.depth - 1
+                else cohort_compressor("identity", 0.05, 8)
+                for l in range(1, base.depth))
+        self.upper_compressors = tuple(upper_compressors)
+        self.class_compressors = tuple(lc.make_compressor()
+                                       for lc in pop.classes)
+        self.cascade = self._build_cascade()
+        self.accountant = CohortAccountant(self.tree, pop.classes,
+                                           self.upper_compressors, pop.dim)
+        self.fault_model = (FaultModel(fault_config, self.tree)
+                            if fault_config is not None else None)
+
+        self.boundaries = bucket_boundaries(pop.samples_max,
+                                            min_size=pop.samples_min)
+        self.capacities = bucket_capacities(
+            self.boundaries, self.cohort_size, pop.samples_min,
+            pop.samples_max)
+        self._sweep = jax.jit(_make_cohort_sweep(
+            self.cascade, pop.dim, self.boundaries, self.lr,
+            len(pop.classes), self.class_compressors))
+
+    def _build_cascade(self) -> Tuple[CascadeLevel, ...]:
+        def lam_of(c: Compressor) -> float:
+            return (comp_lib.lambda_star(c.eta, c.omega)
+                    if c.eta is not None and c.omega is not None else 1.0)
+
+        # heterogeneous leaves: the mean mixes per-class operators, so take
+        # the most conservative class step size (min lambda_star contracts
+        # for every class; equals the single class's lambda when K == 1)
+        lam0 = min(lam_of(c) for c in self.class_compressors)
+        leaf_c = (self.class_compressors[0]
+                  if len(self.class_compressors) == 1
+                  else comp_lib.identity())  # placeholder: leaf_compress wins
+        out = [CascadeLevel(self.tree.levels[0].name, leaf_c, lam0, 1,
+                            self.tree.levels[0].fanout)]
+        for lev, c in zip(self.tree.levels[1:], self.upper_compressors):
+            out.append(CascadeLevel(lev.name, c, lam_of(c), 1, lev.fanout))
+        return tuple(out)
+
+    # -- per-round derivations -----------------------------------------------
+    def round_key(self, rnd: int):
+        return jax.random.fold_in(jax.random.PRNGKey(self.pop.seed), rnd)
+
+    def init_state(self) -> TreeSyncState:
+        return dist.tree_sync_state_init(
+            {"x": jnp.zeros((self.pop.dim,), jnp.float32)}, self.cascade)
+
+    def round_cohort(self, rnd: int) -> np.ndarray:
+        return sample_cohort(self.pop.seed, rnd, self.pop.n_clients,
+                             self.cohort_size)
+
+    def round_plan(self, rnd: int, ids: np.ndarray,
+                   class_ids: np.ndarray) -> Optional[RoundFaultPlan]:
+        """Fault plan addressed by population ids: the cohort's leaf draws
+        are the population plan's slice at ``ids`` (lane-sliceability)."""
+        if self.fault_model is None:
+            return None
+        nbytes = [0.0] + list(self.accountant.upper_nbytes)
+        return self.fault_model.round_plan(
+            rnd, nbytes_by_level=nbytes, leaf_lanes=ids,
+            leaf_base_time_s=self.accountant.uplink_time_s(class_ids))
+
+    def buckets(self, n_samples: np.ndarray) -> CohortBuckets:
+        return bucket_by_size(n_samples, self.boundaries, self.capacities)
+
+    # -- the round -----------------------------------------------------------
+    def round(self, state: TreeSyncState,
+              rnd: int) -> Tuple[TreeSyncState, CohortRoundReport]:
+        ids = self.round_cohort(rnd)
+        spec = self.pop.client_spec(ids)
+        cb = self.buckets(spec.n_samples)
+        plan = self.round_plan(rnd, ids, spec.class_ids)
+        smasks = plan.survivor_masks() if plan is not None else None
+        masks = (tuple(jnp.asarray(m) for m in smasks)
+                 if smasks is not None else None)
+
+        onehot = np.zeros((self.cohort_size, len(self.pop.classes)),
+                          np.float32)
+        onehot[np.arange(self.cohort_size), spec.class_ids] = 1.0
+        steps = spec.n_samples.astype(np.int32)
+        staged = [spec.targets, spec.flix_alpha, steps, onehot,
+                  *cb.index, *cb.valid] + ([m for m in smasks]
+                                           if smasks is not None else [])
+        staged_nbytes = int(sum(a.nbytes for a in staged))
+
+        new_state, jmetrics = self._sweep(
+            self.round_key(rnd), state, spec.targets, spec.flix_alpha,
+            steps, onehot, tuple(cb.index), tuple(cb.valid), masks)
+
+        rb = self.accountant.round_bytes(rnd, spec.class_ids, smasks)
+        if self.ledger is not None:
+            self.accountant.record(self.ledger, rb)
+        report = CohortRoundReport(
+            round=rnd, cohort_ids=ids, class_ids=spec.class_ids, bytes=rb,
+            plan=plan, staged_nbytes=staged_nbytes,
+            padded_steps=cb.padded_steps,
+            metrics={k: float(v) for k, v in jmetrics.items()})
+        if self.metrics is not None:
+            self.metrics.observe_cohort_round(rnd, report)
+        return new_state, report
+
+    def run(self, n_rounds: int,
+            state: Optional[TreeSyncState] = None
+            ) -> Tuple[TreeSyncState, list]:
+        state = self.init_state() if state is None else state
+        reports = []
+        for rnd in range(n_rounds):
+            state, rep = self.round(state, rnd)
+            reports.append(rep)
+        return state, reports

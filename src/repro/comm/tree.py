@@ -18,7 +18,7 @@ preset's numbers bit-for-bit.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, Optional, Tuple
 
 from repro.comm.topology import (DEFAULT_PROFILE, DEFAULT_TILE_BYTES,
@@ -160,6 +160,28 @@ class TreeTopology:
                                       cfg.straggler_sigma,
                                       self.n_children(l),
                                       cfg.level_deadline_s(lev.name))
+
+    def with_n_leaves(self, n: int) -> "TreeTopology":
+        """Same hierarchy rescaled so ``n_leaves == n`` by widening the leaf
+        fanout (upper fanouts unchanged).
+
+        The infrastructure above the leaf hop — cells, regions, the root —
+        persists while cohorts of any size occupy the leaf slots, which is
+        exactly the cross-device picture: ``edge_fl_tree.with_n_leaves(10**5)``
+        keeps 5 metro aggregators per region and 4 regions, but each cell now
+        fronts 5000 phones.  ``n`` must be a multiple of the upper fanouts'
+        product.
+        """
+        upper = 1
+        for lev in self.levels[1:]:
+            upper *= lev.fanout
+        if n < upper or n % upper != 0:
+            raise ValueError(
+                f"cannot rescale {self.name!r} to {n} leaves: upper-level "
+                f"fanouts multiply to {upper}, need a positive multiple")
+        leaf = replace(self.levels[0], fanout=n // upper)
+        return TreeTopology(f"{self.name}/leaves{n}",
+                            (leaf,) + self.levels[1:])
 
     # -- depth-2 bridge ------------------------------------------------------
     @classmethod

@@ -202,6 +202,24 @@ def efbv_sync(key, grads_g, state: SyncState, c: Compressor, lam: float,
             )
 
 
+def fused_apply(fn, delta_b, d: int):
+    """Apply ``fn`` to the true d-dim rows of a bucketed (G, nb, B) delta.
+
+    ``fn`` maps a ``(G, d)`` matrix to a ``(G, d)`` matrix; the zero-padded
+    bucket tail is stripped before and restored after, so size-dependent
+    operators (top-k's k, rand-k's d/k scale) see the real dimension.  This
+    is the reshape/pad contract every fused compression pass shares — the
+    cohort engine's per-class leaf compression plugs in through it.
+    """
+    G = delta_b.shape[0]
+    flat = delta_b.reshape(G, -1)
+    pad = flat.shape[1] - d
+    out = fn(flat[:, :d])
+    if pad:
+        out = jnp.pad(out, ((0, 0), (0, pad)))
+    return out.reshape(delta_b.shape)
+
+
 def _fused_compress(c: Compressor, keys, delta_b, d: int):
     """One fused compressor pass over the bucketed (G, n_buckets, B) delta.
 
@@ -211,13 +229,8 @@ def _fused_compress(c: Compressor, keys, delta_b, d: int):
     smaller than a bucket.  (Only ``flatten=True`` compressors reach this —
     sharding-safe ones stay on the per-leaf path.)
     """
-    G = delta_b.shape[0]
-    flat = delta_b.reshape(G, -1)
-    pad = flat.shape[1] - d
-    out = jax.vmap(lambda k, v: c(k, v))(keys, flat[:, :d])
-    if pad:
-        out = jnp.pad(out, ((0, 0), (0, pad)))
-    return out.reshape(delta_b.shape)
+    return fused_apply(
+        lambda core: jax.vmap(lambda k, v: c(k, v))(keys, core), delta_b, d)
 
 
 def _efbv_sync_leaves(key, grads_g, state: SyncState, c: Compressor,
@@ -320,7 +333,7 @@ def _survivor_weights(m, f: int):
 def tree_param_sync(key, params_g, state: TreeSyncState,
                     levels: Sequence[CascadeLevel],
                     bucket_size: Optional[int] = None,
-                    survivors=None):
+                    survivors=None, leaf_compress=None):
     """Multi-level anchor cascade (Cohort-Squeeze beyond two levels).
 
     params_g: pytree with leading leaf axis G = prod(fanout_l) — one training
@@ -354,6 +367,14 @@ def tree_param_sync(key, params_g, state: TreeSyncState,
     is carried, never corrupted.  ``survivors=None`` (or all-ones masks) is
     bit-identical to the faultless path; the aggregator down-path is modeled
     reliable, so inner anchors always adopt.
+
+    ``leaf_compress`` (optional) replaces level 0's fused compressor pass
+    with a custom ``(keys, delta_b, d) -> d_i`` callable (same bucketed
+    shapes — build it on ``fused_apply``).  The cohort engine uses this to
+    compress each leaf's delta with its *own link class's* compressor while
+    the rest of the cascade runs unchanged.  Fused path only: heterogeneous
+    per-leaf compression over a stacked dense cohort has no per-leaf
+    (sharding-safe) analogue.
     """
     from repro.comm import buckets as bk
 
@@ -383,6 +404,10 @@ def tree_param_sync(key, params_g, state: TreeSyncState,
                            == (lev.period - 1)).astype(jnp.int32)
 
     fused = bool(bucket_size) and all(lev.compressor.flatten for lev in levels)
+    if leaf_compress is not None and not fused:
+        raise ValueError(
+            "leaf_compress requires the fused (bucketized) path: set a "
+            "bucket_size > 0 and use flatten=True level compressors")
     masks = _survivor_masks(survivors, levels)
 
     # gate the whole sync (including the fused path's bucketize/debucketize
@@ -393,7 +418,7 @@ def tree_param_sync(key, params_g, state: TreeSyncState,
         st = TreeSyncState(anchors=anchors, step=state.step)
         if fused:
             return _tree_sync_fused(key, params_g, st, levels, bucket_size,
-                                    n_sync, masks)
+                                    n_sync, masks, leaf_compress)
         return _tree_sync_leaves(key, params_g, st, levels, n_sync, masks)
 
     def no_sync(args):
@@ -406,7 +431,7 @@ def tree_param_sync(key, params_g, state: TreeSyncState,
 
 
 def _tree_sync_fused(key, params_g, state, levels, bucket_size, n_sync,
-                     masks=None):
+                     masks=None, leaf_compress=None):
     from repro.comm import buckets as bk
 
     L = len(levels)
@@ -421,22 +446,25 @@ def _tree_sync_fused(key, params_g, state, levels, bucket_size, n_sync,
             a_b, _ = bk.bucketize_groups(state.anchors[l], bucket_size)
         anchors_b.append(a_b)
 
+    def compress(l, keys, delta_b):
+        if l == 0 and leaf_compress is not None:
+            return leaf_compress(keys, delta_b, layout.d)
+        return _fused_compress(levels[l].compressor, keys, delta_b, layout.d)
+
     def level_sync(l, child_b, parent_b):
         lev = levels[l]
         m = masks[l]
         with annotate(f"sync/level/{lev.name}"):
             keys = jax.random.split(_level_key(key, l, L), child_b.shape[0])
             if parent_b.ndim == 2:                  # root: unstacked anchor
-                d_i = _fused_compress(lev.compressor, keys,
-                                      child_b - parent_b, layout.d)
+                d_i = compress(l, keys, child_b - parent_b)
                 if m is not None:
                     d_i = d_i * _survivor_weights(m, d_i.shape[0])[:, None, None]
                 return parent_b + lev.lam * jnp.mean(d_i, axis=0)
             n_par = parent_b.shape[0]
             f = child_b.shape[0] // n_par
-            d_i = _fused_compress(lev.compressor, keys,
-                                  child_b - jnp.repeat(parent_b, f, axis=0),
-                                  layout.d)
+            d_i = compress(l, keys,
+                           child_b - jnp.repeat(parent_b, f, axis=0))
             d_g = d_i.reshape((n_par, f) + d_i.shape[1:])
             if m is not None:
                 w = _survivor_weights(m.reshape(n_par, f), f)

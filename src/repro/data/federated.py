@@ -16,6 +16,52 @@ from typing import List, Sequence
 import numpy as np
 
 
+def dirichlet_mixtures(client_ids, n_classes: int, alpha: float,
+                       seed: int = 0) -> np.ndarray:
+    """Per-client Dirichlet(alpha) class mixtures at population scale.
+
+    ``dirichlet_split`` materializes index lists — fine for tens of clients,
+    impossible for 10^6.  This is the population-scale form the cohort
+    simulator uses: row ``i`` is client ``client_ids[i]``'s class-probability
+    vector, drawn from the counter PRNG addressed by ``(seed, class,
+    client_id)`` — a pure function of the client id, so deriving a sampled
+    cohort's mixtures equals slicing the full population's (lane-sliceable,
+    like every `repro.faults` process).
+
+    Gamma draws use the Wilson-Hilferty cube at shape ``alpha + 1`` with the
+    exact boost ``Gamma(alpha) = Gamma(alpha+1) * U^(1/alpha)``, normalized
+    per client in log space so alpha -> 0 concentrates each client on a
+    single class without underflow and alpha -> inf approaches the uniform
+    (IID) mixture.
+
+    ``client_ids`` is an ``(n,)`` int array of population ids, or an int n
+    (meaning ids ``0..n-1``).
+    """
+    from repro.faults.model import counter_normal, counter_uniform
+
+    if np.ndim(client_ids) == 0:
+        client_ids = np.arange(int(client_ids))
+    ids = np.asarray(client_ids, np.int64)
+    if alpha <= 0:
+        raise ValueError(f"alpha must be > 0, got {alpha}")
+    a = float(alpha)
+    k = a + 1.0
+    n = ids.shape[0]
+    log_g = np.empty((n, int(n_classes)))
+    for c in range(int(n_classes)):
+        z = counter_normal(seed, 0, f"dirichlet/{c}", n, lane=ids)
+        u = counter_uniform(seed, 0, f"dirichlet/{c}/boost", n, lane=ids)
+        # Wilson-Hilferty: Gamma(k) ~= k * (1 - 1/(9k) + z*sqrt(1/(9k)))^3
+        wh = k * np.maximum(1.0 - 1.0 / (9.0 * k)
+                            + z * np.sqrt(1.0 / (9.0 * k)), 0.0) ** 3
+        log_g[:, c] = (np.log(np.maximum(wh, 1e-300))
+                       + np.log(np.maximum(u, 1e-300)) / a)
+    log_g -= log_g.max(axis=1, keepdims=True)
+    mix = np.exp(log_g)
+    mix /= mix.sum(axis=1, keepdims=True)
+    return mix
+
+
 def dirichlet_split(labels: np.ndarray, n_clients: int, alpha: float, seed: int = 0) -> List[np.ndarray]:
     """Dirichlet(alpha) label-skew split (the paper's S2). Returns index lists."""
     rng = np.random.default_rng(seed)

@@ -48,24 +48,35 @@ def _mix64(x) -> np.ndarray:
 
 
 def counter_uniform(seed: int, rnd: int, stream: str, n: int,
-                    lane: int = 0) -> np.ndarray:
+                    lane=0) -> np.ndarray:
     """``n`` uniforms in [0, 1) addressed by ``(seed, round, stream, lane+i)``.
 
     Pure function of its arguments: the same address always yields the same
     draw, and distinct streams/rounds/lanes are decorrelated by the mixer.
+
+    ``lane`` is either a scalar offset (draws address lanes ``lane..lane+n-1``)
+    or an explicit ``(n,)`` array of lane indices — the cohort engine's form:
+    drawing a 10^6-lane process sliced to any index set equals drawing those
+    lanes directly, because each draw depends on its own lane address alone.
     """
     with np.errstate(over="ignore"):
         base = _mix64(np.uint64(seed & 0xFFFFFFFFFFFFFFFF)
                       + _GOLDEN * np.uint64(rnd & 0xFFFFFFFFFFFFFFFF))
         base ^= np.uint64(zlib.crc32(stream.encode()))
-        lanes = (np.arange(n, dtype=np.uint64) + np.uint64(lane)) * _GOLDEN
+        lane = np.asarray(lane, dtype=np.uint64)
+        if lane.ndim == 0:
+            lanes = (np.arange(n, dtype=np.uint64) + lane) * _GOLDEN
+        else:
+            if lane.shape != (n,):
+                raise ValueError(f"lane array shape {lane.shape} != ({n},)")
+            lanes = lane * _GOLDEN
         bits = _mix64(base + lanes)
     # top 53 bits -> double in [0, 1)
     return (bits >> np.uint64(11)).astype(np.float64) * (2.0 ** -53)
 
 
 def counter_normal(seed: int, rnd: int, stream: str, n: int,
-                   lane: int = 0) -> np.ndarray:
+                   lane=0) -> np.ndarray:
     """Standard normals via Box-Muller on two counter-uniform streams."""
     u1 = counter_uniform(seed, rnd, stream + "/u1", n, lane)
     u2 = counter_uniform(seed, rnd, stream + "/u2", n, lane)
@@ -280,60 +291,88 @@ class FaultModel:
             return resolve(level, self.cfg)
         return self.cfg.link_faults(self.tree.levels[level].name)
 
+    def _lanes(self, level: int, lanes) -> Tuple[int, np.ndarray]:
+        """Resolve optional explicit lane indices to ``(n, lane_array)``.
+
+        ``lanes=None`` addresses the level's children positionally
+        (``0..n_children-1``); an explicit array addresses global lanes (the
+        cohort engine passes population-wide client ids for level 0), making
+        every per-child draw sliceable: the draw for lane ``i`` never depends
+        on which other lanes are in the plan.
+        """
+        if lanes is None:
+            n = self.n_children[level]
+            return n, np.arange(n, dtype=np.uint64)
+        lanes = np.asarray(lanes, dtype=np.uint64)
+        return int(lanes.shape[0]), lanes
+
     # -- per-process draws ---------------------------------------------------
-    def available(self, rnd: int) -> np.ndarray:
+    def available(self, rnd: int, lanes=None) -> np.ndarray:
         """Leaf check-in mask for this round (availability process)."""
-        n = self.n_children[0]
-        u = counter_uniform(self.cfg.seed, rnd, "avail", n)
+        n, lane = self._lanes(0, lanes)
+        u = counter_uniform(self.cfg.seed, rnd, "avail", n, lane=lane)
         return u < self.cfg.availability
 
-    def straggler_scale(self, rnd: int, level: int) -> np.ndarray:
+    def straggler_scale(self, rnd: int, level: int, lanes=None) -> np.ndarray:
         """Per-child slowdown multiplier (>= 1) at ``level``."""
-        n = self.n_children[level]
+        n, lane = self._lanes(level, lanes)
         name = self.tree.levels[level].name
         if self.cfg.straggler_rate <= 0 or self.cfg.straggler_sigma <= 0:
             return np.ones(n)
-        hit = counter_uniform(self.cfg.seed, rnd, f"{name}/straggle", n)
-        z = np.abs(counter_normal(self.cfg.seed, rnd, f"{name}/stragglez", n))
+        hit = counter_uniform(self.cfg.seed, rnd, f"{name}/straggle", n,
+                              lane=lane)
+        z = np.abs(counter_normal(self.cfg.seed, rnd, f"{name}/stragglez", n,
+                                  lane=lane))
         return np.where(hit < self.cfg.straggler_rate,
                         np.exp(self.cfg.straggler_sigma * z), 1.0)
 
-    def attempt_outcomes(self, rnd: int, level: int,
-                         attempt: int) -> Tuple[np.ndarray, np.ndarray,
-                                                np.ndarray]:
+    def attempt_outcomes(self, rnd: int, level: int, attempt: int,
+                         lanes=None) -> Tuple[np.ndarray, np.ndarray,
+                                              np.ndarray]:
         """(dropped, corrupted, delayed) masks for one transmission attempt
-        of every child message on ``level`` — retries redraw via ``attempt``."""
-        n = self.n_children[level]
+        of every child message on ``level`` — retries redraw via ``attempt``.
+
+        Each attempt is its own stream (``<level>/xmit/a<k>`` for retries)
+        rather than a lane offset of ``attempt * n``: offsetting by ``n``
+        made retry draws depend on the population size, which would break the
+        lane-sliceability contract above.
+        """
+        n, lane = self._lanes(level, lanes)
         name = self.tree.levels[level].name
         lf = self.link_faults_at(level)
-        u = counter_uniform(self.cfg.seed, rnd, f"{name}/xmit", n,
-                            lane=attempt * n)
+        sfx = "" if attempt == 0 else f"/a{attempt}"
+        u = counter_uniform(self.cfg.seed, rnd, f"{name}/xmit{sfx}", n,
+                            lane=lane)
         dropped = u < lf.drop_rate
         corrupted = (~dropped) & (u < lf.drop_rate + lf.corrupt_rate)
-        ud = counter_uniform(self.cfg.seed, rnd, f"{name}/delay", n,
-                             lane=attempt * n)
+        ud = counter_uniform(self.cfg.seed, rnd, f"{name}/delay{sfx}", n,
+                             lane=lane)
         delayed = ud < lf.delay_rate
         return dropped, corrupted, delayed
 
     # -- the full round ------------------------------------------------------
-    def level_plan(self, rnd: int, level: int, base_time_s: float,
-                   alive: np.ndarray) -> LevelPlan:
+    def level_plan(self, rnd: int, level: int, base_time_s,
+                   alive: np.ndarray, lanes=None) -> LevelPlan:
         """Fault outcome of one level's child->parent messages.
 
         ``alive`` marks children that have anything to send (available
         leaves, or aggregators with >= 1 surviving descendant);
         ``base_time_s`` is the nominal per-child message time on the level's
-        link.  A child survives iff it is alive, its message is delivered
-        within ``max_retries`` retransmissions, and its arrival time —
-        straggle * base + delays + retry backoffs — makes the deadline.
+        link — a scalar, or a per-child array when children ride
+        heterogeneous links (the cohort engine's per-class uplinks).  A child
+        survives iff it is alive, its message is delivered within
+        ``max_retries`` retransmissions, and its arrival time — straggle *
+        base + delays + retry backoffs — makes the deadline.  ``lanes``
+        addresses the per-child draws explicitly (see ``_lanes``).
         """
         lev = self.tree.levels[level]
         lf = self.link_faults_at(level)
         deadline = self.cfg.level_deadline_s(lev.name)
-        n = self.n_children[level]
         alive = np.asarray(alive, bool)
+        n = alive.shape[0]
+        base_time_s = np.asarray(base_time_s, float)
 
-        scale = self.straggler_scale(rnd, level)
+        scale = self.straggler_scale(rnd, level, lanes=lanes)
         arrival = base_time_s * scale
         delivered = np.zeros(n, bool)
         n_corrupt = n_retries = 0
@@ -350,7 +389,7 @@ class FaultModel:
                     + base_time_s * scale,
                     arrival)
             dropped, corrupted, delayed = self.attempt_outcomes(
-                rnd, level, attempt)
+                rnd, level, attempt, lanes=lanes)
             n_corrupt += int((pending & corrupted).sum())
             arrival = np.where(pending & delayed, arrival + lf.delay_s,
                                arrival)
@@ -362,7 +401,8 @@ class FaultModel:
         survivors = made_deadline
         time_s = float(min(deadline, arrival[survivors].max())
                        if survivors.any() else
-                       (deadline if math.isfinite(deadline) else base_time_s))
+                       (deadline if math.isfinite(deadline)
+                        else np.max(base_time_s)))
         return LevelPlan(
             name=lev.name, survivors=survivors,
             arrival_s=np.where(alive, arrival, np.inf),
@@ -375,21 +415,39 @@ class FaultModel:
 
     def round_plan(self, rnd: int,
                    nbytes_by_level: Optional[Sequence[float]] = None,
-                   ) -> RoundFaultPlan:
+                   leaf_lanes=None, leaf_base_time_s=None) -> RoundFaultPlan:
         """Full per-level fault plan for one round.
 
         ``nbytes_by_level[l]`` sizes the nominal per-child message on level
         ``l`` (defaults to 0 — latency-only base times).  An aggregator is
         alive at level ``l`` iff at least one of its children survived level
         ``l-1``, so dead subtrees propagate up the cascade.
+
+        ``leaf_lanes`` (optional, length ``n_leaves``) addresses the leaf
+        processes by *global* lane index instead of position — the cohort
+        engine passes the sampled clients' population ids, so a cohort's
+        leaf-level plan is exactly the corresponding slice of the full
+        population's plan.  ``leaf_base_time_s`` (scalar or per-leaf array)
+        overrides level 0's nominal message time, letting heterogeneous
+        client link classes set their own uplink times; upper levels are
+        infrastructure and keep positional lanes.
         """
         plan = RoundFaultPlan(round=rnd)
-        alive = self.available(rnd)
+        if leaf_lanes is not None:
+            leaf_lanes = np.asarray(leaf_lanes)
+            if leaf_lanes.shape[0] != self.n_children[0]:
+                raise ValueError(
+                    f"leaf_lanes has {leaf_lanes.shape[0]} lanes but the "
+                    f"tree has {self.n_children[0]} leaves")
+        alive = self.available(rnd, lanes=leaf_lanes)
         for l, lev in enumerate(self.tree.levels):
             nbytes = (float(nbytes_by_level[l])
                       if nbytes_by_level is not None else 0.0)
             base_s = lev.link.time_s(nbytes)
-            lp = self.level_plan(rnd, l, base_s, alive)
+            if l == 0 and leaf_base_time_s is not None:
+                base_s = leaf_base_time_s
+            lp = self.level_plan(rnd, l, base_s, alive,
+                                 lanes=leaf_lanes if l == 0 else None)
             plan.levels.append(lp)
             # parents with >= 1 surviving child carry the subtree upward
             f = lev.fanout

@@ -225,6 +225,25 @@ class MetricsRegistry:
                 lv.survivor_frac, step=rnd)
         self.gauge("faults/round_time_s").set(stats["time_s"], step=rnd)
 
+    def observe_cohort_round(self, rnd: int, report) -> None:
+        """Cohort-round series from a ``repro.cohort.CohortRoundReport``:
+        per-level/per-class byte counters (the analytic attribution), the
+        participation count, and the sweep's in-jit scalar metrics — plus
+        the round's fault plan through ``observe_fault_plan`` when the
+        engine ran one."""
+        rb = report.bytes
+        self.counter("cohort/bytes/total").inc(rb.total_bytes, step=rnd)
+        for i, nb in enumerate(rb.leaf_class_nbytes):
+            self.counter(f"cohort/bytes/class_{i}").inc(nb, step=rnd)
+        self.gauge("cohort/participants").set(report.n_participants,
+                                              step=rnd)
+        self.gauge("cohort/staged_nbytes").set(report.staged_nbytes,
+                                               step=rnd)
+        for k, v in report.metrics.items():
+            self.gauge(f"cohort/{k}").set(float(v), step=rnd)
+        if report.plan is not None:
+            self.observe_fault_plan(rnd, report.plan)
+
     def fault_stats(self) -> Dict[str, float]:
         """The ``faults/*`` totals/values (empty when no faults observed)."""
         out = {}

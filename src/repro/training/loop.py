@@ -88,10 +88,19 @@ def train(cfg: ModelConfig, tc: TrainConfig, batches: Iterator[dict],
             registry.observe_round_cost(0, cost)
 
     fault_model = _fault_model(tc, n_groups, n_pods)
+    fault_nbytes = None
     if fault_model is not None:
         log.info("fault injection on (seed=%d): degraded rounds aggregate "
                  "over deadline survivors; replayable from (seed, round)",
                  tc.sync.faults.seed)
+        if (tc.sync.mode != "dense"
+                and len(cost.levels) == len(fault_model.tree.levels)):
+            # size each level's nominal message from the measured round cost
+            # (bytes_per_round is amortized over the level period) so
+            # straggler arrivals and deadline misses reflect real payloads,
+            # not latency-only links
+            fault_nbytes = [lv.bytes_per_round * lv.period
+                            for lv in cost.levels]
 
     history = []
     t0 = obs_trace.wall_s()
@@ -113,7 +122,8 @@ def train(cfg: ModelConfig, tc: TrainConfig, batches: Iterator[dict],
             else:
                 # deterministic per-round fault plan; dropped children sync
                 # with zero weight and keep their local params this round
-                plan = fault_model.round_plan(step)
+                plan = fault_model.round_plan(step,
+                                              nbytes_by_level=fault_nbytes)
                 masks = tuple(jnp.asarray(m) for m in plan.survivor_masks())
                 state, metrics = step_fn(state, model_batch, masks)
         if fault_model is not None and tracing:

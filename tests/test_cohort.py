@@ -1,0 +1,382 @@
+"""Cohort simulator (repro.cohort): population laws, Feistel sampling,
+size bucketing, the vectorized round engine, and byte attribution."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 container lacks hypothesis: deterministic shim
+    from _hypothesis_shim import given, settings, strategies as st
+
+from benchmarks.bench_cohort import _bitident_pop, reference_round
+from repro.cohort import (CohortEngine, LinkClass, Population,
+                          bucket_boundaries, bucket_by_size,
+                          bucket_capacities, cohort_compressor,
+                          link_classes_from_tree, materialized_round_bytes,
+                          message_nbytes, sample_cohort)
+from repro.comm import Link, TreeLevel, TreeTopology, get_tree_topology
+from repro.comm.ledger import CommLedger
+from repro.comm.tree import register_tree_topology
+from repro.data.federated import dirichlet_mixtures, dirichlet_split
+from repro.faults import FaultConfig, FaultModel
+
+
+# ---------------------------------------------------------------------------
+# population law
+# ---------------------------------------------------------------------------
+class TestPopulation:
+    def test_spec_is_population_slice(self):
+        """The design contract: a cohort's spec equals the population-wide
+        derivation sliced at its ids (clients are pure functions of id)."""
+        pop = Population(n_clients=10_000, dim=16)
+        ids = np.array([7, 9_999, 0, 4_321])
+        batch = pop.client_spec(ids)
+        for i, cid in enumerate(ids):
+            one = pop.client_spec(np.array([cid]))
+            np.testing.assert_array_equal(batch.targets[i], one.targets[0])
+            assert batch.class_ids[i] == one.class_ids[0]
+            assert batch.flix_alpha[i] == one.flix_alpha[0]
+            assert batch.n_samples[i] == one.n_samples[0]
+
+    def test_derivations_bounded_and_typed(self):
+        pop = Population(n_clients=50_000)
+        spec = pop.client_spec(np.arange(2_000))
+        assert spec.targets.dtype == np.float32
+        assert spec.n_samples.min() >= pop.samples_min
+        assert spec.n_samples.max() <= pop.samples_max
+        assert spec.flix_alpha.min() >= pop.flix_min
+        assert spec.flix_alpha.max() <= pop.flix_max
+        # class mix tracks the configured weights at population scale
+        mix = pop.class_mix_counts(np.arange(20_000)) / 20_000
+        for got, lc in zip(mix, pop.classes):
+            assert abs(got - lc.weight) < 0.02, (got, lc)
+
+    def test_default_classes_from_tree_and_weight_validation(self):
+        classes = link_classes_from_tree(get_tree_topology("edge_fl_tree"))
+        assert abs(sum(lc.weight for lc in classes) - 1.0) < 1e-12
+        bad = tuple(dataclasses.replace(lc, weight=0.5) for lc in classes)
+        with pytest.raises(ValueError, match="weights"):
+            Population(n_clients=10, classes=bad)
+        with pytest.raises(ValueError, match="ids outside"):
+            Population(n_clients=10).client_spec(np.array([10]))
+
+    def test_cohort_resolver_rejects_unflattenable(self):
+        # qsgd resolves to the dense quantizer (stacked cohort rows), and
+        # sharding-safe flatten=False operators are rejected up front
+        assert cohort_compressor("qsgd", 0.05, 8).flatten
+        with pytest.raises(ValueError, match="not flattenable"):
+            cohort_compressor("qsgd_sharded", 0.05, 8)
+
+
+class TestDirichlet:
+    def test_iid_limit_and_concentration(self):
+        # alpha -> inf: every client's mixture approaches uniform (IID)
+        mix = dirichlet_mixtures(512, n_classes=8, alpha=1e6, seed=1)
+        np.testing.assert_allclose(mix, 1.0 / 8, atol=2e-3)
+        np.testing.assert_allclose(mix.sum(axis=1), 1.0, atol=1e-12)
+        # alpha -> 0: each client concentrates on a single class, and the
+        # argmax class varies across clients (not one global winner)
+        mix0 = dirichlet_mixtures(512, n_classes=8, alpha=1e-3, seed=1)
+        assert mix0.max(axis=1).mean() > 0.95
+        assert len(np.unique(mix0.argmax(axis=1))) >= 4
+
+    def test_lane_sliceable(self):
+        full = dirichlet_mixtures(1_000, n_classes=5, alpha=0.3, seed=2)
+        ids = np.array([3, 999, 140, 7])
+        np.testing.assert_array_equal(
+            dirichlet_mixtures(ids, n_classes=5, alpha=0.3, seed=2),
+            full[ids])
+
+    def test_rejects_bad_alpha(self):
+        with pytest.raises(ValueError, match="alpha"):
+            dirichlet_mixtures(4, 3, alpha=0.0)
+
+    def test_split_alpha_limits_noncontiguous_labels(self):
+        # labels {1, 3, 7}: non-contiguous label sets must not be indexed
+        # positionally by raw value
+        rng = np.random.default_rng(0)
+        labels = rng.choice([1, 3, 7], size=3_000, p=[0.5, 0.3, 0.2])
+        # alpha -> inf: every client's label histogram ~ the global one
+        parts = dirichlet_split(labels, 10, alpha=1e6, seed=3)
+        assert sum(len(p) for p in parts) == len(labels)
+        for p in parts:
+            frac1 = np.mean(labels[p] == 1)
+            assert abs(frac1 - 0.5) < 0.1, frac1
+        # alpha -> 0: each label's mass lands on ~one client, so nearly all
+        # samples concentrate on as many clients as there are labels
+        parts0 = dirichlet_split(labels, 10, alpha=1e-3, seed=3)
+        sizes = sorted((len(p) for p in parts0), reverse=True)
+        assert sum(sizes[:3]) > 0.95 * len(labels), sizes
+
+
+# ---------------------------------------------------------------------------
+# cohort sampling
+# ---------------------------------------------------------------------------
+class TestSampleCohort:
+    def test_distinct_in_range_replayable(self):
+        ids = sample_cohort(0, 5, 1_000_000, 50_000)
+        assert ids.shape == (50_000,)
+        assert len(np.unique(ids)) == 50_000
+        assert ids.min() >= 0 and ids.max() < 1_000_000
+        np.testing.assert_array_equal(ids,
+                                      sample_cohort(0, 5, 1_000_000, 50_000))
+
+    def test_varies_by_round_and_seed(self):
+        a = sample_cohort(0, 1, 10_000, 500)
+        assert not np.array_equal(a, sample_cohort(0, 2, 10_000, 500))
+        assert not np.array_equal(a, sample_cohort(1, 1, 10_000, 500))
+
+    def test_full_population_is_permutation(self):
+        ids = sample_cohort(4, 0, 257, 257)  # odd size forces cycle walking
+        np.testing.assert_array_equal(np.sort(ids), np.arange(257))
+
+    def test_rejects_bad_cohort(self):
+        with pytest.raises(ValueError):
+            sample_cohort(0, 0, 100, 101)
+        with pytest.raises(ValueError):
+            sample_cohort(0, 0, 100, 0)
+
+
+# ---------------------------------------------------------------------------
+# size bucketing
+# ---------------------------------------------------------------------------
+class TestBuckets:
+    def test_every_member_placed_once_within_boundary(self):
+        rng = np.random.default_rng(1)
+        sizes = rng.integers(8, 65, size=3_000)
+        bb = bucket_boundaries(64, min_size=8)
+        caps = bucket_capacities(bb, 3_000, 8, 64)
+        cb = bucket_by_size(sizes, bb, caps)
+        placed = np.concatenate([ix[v] for ix, v in zip(cb.index, cb.valid)])
+        np.testing.assert_array_equal(np.sort(placed), np.arange(3_000))
+        for b, (ix, v) in enumerate(zip(cb.index, cb.valid)):
+            # spill-up only: a member never lands below its size's bucket
+            assert (sizes[ix[v]] <= bb[b]).all()
+        assert cb.padded_steps < 3_000 * 64
+
+    def test_spill_up_and_top_overflow(self):
+        sizes = np.array([8, 8, 8, 64])
+        cb = bucket_by_size(sizes, (8, 64), (2, 4))
+        placed = sorted(np.concatenate(
+            [ix[v] for ix, v in zip(cb.index, cb.valid)]).tolist())
+        assert placed == [0, 1, 2, 3]
+        assert cb.valid[1].sum() == 2  # one spilled member + the size-64 one
+        with pytest.raises(RuntimeError, match="capacities exhausted"):
+            bucket_by_size(sizes, (8, 64), (2, 1))
+        with pytest.raises(ValueError, match="top boundary"):
+            bucket_by_size(np.array([65]), (8, 64), (2, 2))
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+def _faulted(seed=3):
+    return FaultConfig(seed=seed, availability=0.7, drop_rate=0.1)
+
+
+class TestEngineBitExactness:
+    @pytest.mark.parametrize("cfg", [None, _faulted()],
+                             ids=["nofault", "faulted"])
+    def test_engine_matches_per_client_loop(self, cfg):
+        """The acceptance gate: a 16-client population through the jitted
+        vectorized sweep reproduces the per-client ``tree_param_sync`` loop
+        bitwise, with and without participation faults."""
+        eng = CohortEngine(_bitident_pop(), cohort_size=16, fault_config=cfg)
+        se, sr = eng.init_state(), eng.init_state()
+        for rnd in range(3):
+            se, _ = eng.round(se, rnd)
+            sr = reference_round(eng, sr, rnd)
+            for a, b in zip(se.anchors, sr.anchors):
+                assert (np.asarray(a["x"]).tobytes()
+                        == np.asarray(b["x"]).tobytes())
+
+    def test_heterogeneous_classes_match_masked_reference(self):
+        """K=2 link classes: the one-hot blended ``leaf_compress`` equals
+        compressing each client with its own class operator.
+
+        Depth-1 tree so the root anchor directly exposes the level-0 update
+        (in deeper cascades the top-down adoption pass overwrites the lower
+        anchors with the root's, hiding the per-class deltas).
+        """
+        classes = (
+            LinkClass("fast", 0.5, Link(gbps=0.1, latency_us=100.0),
+                      compressor="identity"),
+            LinkClass("slow", 0.5, Link(gbps=0.001, latency_us=50_000.0),
+                      compressor="top_k", compress_ratio=0.25),
+        )
+        register_tree_topology(TreeTopology("cohort_het_flat", (
+            TreeLevel("uplink", 8, Link(gbps=0.001, latency_us=50_000.0)),
+        )))
+        pop = Population(n_clients=1_000, dim=32, tree="cohort_het_flat",
+                         classes=classes)
+        eng = CohortEngine(pop, cohort_size=8)
+        state = eng.init_state()
+        rnd = 0
+        ids = eng.round_cohort(rnd)
+        spec = pop.client_spec(ids)
+        assert len(np.unique(spec.class_ids)) == 2  # both operators exercised
+        new_state, _ = eng.round(state, rnd)
+
+        # reference: per-client local scans, then a hand-rolled delta pass
+        # dispatching each client's own class compressor
+        from benchmarks.bench_cohort import _client_local
+        root = state.anchors[0]["x"]
+        x = jnp.stack([
+            _client_local(root, jnp.asarray(spec.targets[i]),
+                          jnp.float32(spec.flix_alpha[i]),
+                          spec.n_samples[i], eng.lr)
+            for i in range(8)])
+        comps = [lc.make_compressor() for lc in pop.classes]
+        keys = jax.random.split(eng.round_key(rnd), 8)
+        d_ref = jnp.stack([
+            comps[int(spec.class_ids[i])](keys[i], x[i] - root)
+            for i in range(8)])
+        want = root + eng.cascade[0].lam * jnp.mean(d_ref, axis=0)
+        np.testing.assert_allclose(np.asarray(new_state.anchors[0]["x"]),
+                                   np.asarray(want), rtol=0, atol=1e-6)
+
+    def test_round_replayable_and_stateless_between_engines(self):
+        """(seed, round) fully determines a round: a fresh engine instance
+        replays the same cohort, faults, and resulting state."""
+        pop = Population(n_clients=20_000, dim=16)
+        a = CohortEngine(pop, cohort_size=100, fault_config=_faulted())
+        b = CohortEngine(pop, cohort_size=100, fault_config=_faulted())
+        sa, sb = a.init_state(), b.init_state()
+        for rnd in (0, 1):
+            sa, ra = a.round(sa, rnd)
+            sb, rb = b.round(sb, rnd)
+            np.testing.assert_array_equal(ra.cohort_ids, rb.cohort_ids)
+            np.testing.assert_array_equal(
+                ra.plan.levels[0].survivors, rb.plan.levels[0].survivors)
+            assert ra.bytes == rb.bytes
+            for x, y in zip(sa.anchors, sb.anchors):
+                assert (np.asarray(x["x"]).tobytes()
+                        == np.asarray(y["x"]).tobytes())
+
+    def test_personalization_pull(self):
+        """FLIX semantics: local steps contract clients toward their targets
+        (target_dist shrinks over rounds on a fixed cohort tree)."""
+        pop = Population(n_clients=5_000, dim=16, alpha=10.0)
+        eng = CohortEngine(pop, cohort_size=100)
+        state = eng.init_state()
+        dists = []
+        for rnd in range(4):
+            state, rep = eng.round(state, rnd)
+            dists.append(rep.metrics["target_dist"])
+        assert dists[-1] < dists[0], dists
+
+
+class TestAccounting:
+    def test_analytic_matches_oracle(self):
+        pop = Population(n_clients=10_000, dim=32)
+        eng = CohortEngine(pop, cohort_size=60, fault_config=_faulted(7))
+        state = eng.init_state()
+        for rnd in range(2):
+            state, rep = eng.round(state, rnd)
+            smasks = rep.plan.survivor_masks()
+            oracle = materialized_round_bytes(
+                rnd, rep.class_ids, pop.classes, eng.upper_compressors,
+                eng.tree, pop.dim, smasks)
+            assert rep.bytes.total_bytes == oracle
+            # every surviving leaf is accounted in exactly one class bucket
+            assert (sum(rep.bytes.leaf_class_counts)
+                    == int(smasks[0].sum()))
+
+    def test_ledger_records_per_level_tags(self):
+        ledger = CommLedger()
+        pop = Population(n_clients=10_000, dim=32)
+        eng = CohortEngine(pop, cohort_size=60, ledger=ledger)
+        state, rep = eng.round(eng.init_state(), 0)
+        by_tag = ledger.bytes_by_tag()
+        for name, nb in rep.bytes.by_level(eng.tree).items():
+            assert by_tag.get(name) == nb, (name, by_tag)
+        # per-class split: level-0 links carry the class name
+        links = ledger.bytes_by_link()
+        leaf = eng.tree.levels[0].name
+        class_links = {k: v for k, v in links.items()
+                       if k.startswith(f"{leaf}->up/")}
+        assert sum(class_links.values()) == rep.bytes.leaf_bytes
+
+    def test_message_nbytes_probe_cap(self):
+        from repro.comm.accounting import PROBE_CAP
+        from repro.core import compressors as C
+
+        with pytest.raises(ValueError, match="probe cap"):
+            message_nbytes(C.identity(), PROBE_CAP + 1)
+
+
+class TestEngineObservability:
+    def test_observe_cohort_round(self):
+        from repro.obs.metrics import MetricsRegistry
+
+        reg = MetricsRegistry()
+        pop = Population(n_clients=10_000, dim=16)
+        eng = CohortEngine(pop, cohort_size=100, fault_config=_faulted(),
+                           metrics=reg)
+        eng.round(eng.init_state(), 0)
+        snap = reg.to_dict()
+        names = {m["name"] for m in snap["metrics"]}
+        assert "cohort/bytes/total" in names
+        assert "cohort/participants" in names
+        assert "cohort/target_dist" in names
+        assert "faults/round_time_s" in names  # plan forwarded
+
+
+# ---------------------------------------------------------------------------
+# population-scale fault lane-sliceability (the property the engine rides on)
+# ---------------------------------------------------------------------------
+class TestFaultLaneSlicing:
+    def _model(self, n_leaves):
+        tree = get_tree_topology("edge_fl_tree").with_n_leaves(n_leaves)
+        cfg = FaultConfig(seed=9, availability=0.8, drop_rate=0.1,
+                          straggler_rate=0.2, straggler_sigma=1.0)
+        return FaultModel(cfg, tree)
+
+    @settings(max_examples=8, deadline=None)
+    @given(rnd=st.integers(min_value=0, max_value=50),
+           start=st.integers(min_value=0, max_value=990_000))
+    def test_draws_slice_million_lane_population(self, rnd, start):
+        """Every per-leaf fault process sliced at ANY index set equals
+        drawing those lanes directly (the contract the engine's
+        ``leaf_lanes`` addressing rides on)."""
+        lanes = np.unique((np.arange(1_000) * 977 + start) % 1_000_000)
+        m = self._model(1_000_000)
+        np.testing.assert_array_equal(m.available(rnd, lanes=lanes),
+                                      m.available(rnd)[lanes])
+        np.testing.assert_array_equal(
+            m.straggler_scale(rnd, 0, lanes=lanes),
+            m.straggler_scale(rnd, 0)[lanes])
+        for attempt in (0, 1):
+            part = m.attempt_outcomes(rnd, 0, attempt, lanes=lanes)
+            full = m.attempt_outcomes(rnd, 0, attempt)
+            for x, y in zip(part, full):
+                np.testing.assert_array_equal(x, y[lanes])
+
+    def test_round_plan_leaf_lanes_slice_million_lane_plan(self):
+        """Full plans: round_plan(leaf_lanes=ids) leaf survivors/arrivals ==
+        the 10^6-leaf population plan's rows at those ids."""
+        pop_model = self._model(1_000_000)
+        plan_pop = pop_model.round_plan(3)
+        ids = sample_cohort(0, 3, 1_000_000, 2_000)
+        coh_model = self._model(2_000)
+        plan_coh = coh_model.round_plan(3, leaf_lanes=ids)
+        np.testing.assert_array_equal(plan_coh.levels[0].survivors,
+                                      plan_pop.levels[0].survivors[ids])
+        np.testing.assert_array_equal(plan_coh.levels[0].arrival_s,
+                                      plan_pop.levels[0].arrival_s[ids])
+
+    def test_retry_draws_population_size_independent(self):
+        """Retry attempts draw from per-attempt streams, not lane offsets of
+        attempt*n — the draw for lane i is the same in any population."""
+        small = self._model(100)
+        big = self._model(1_000_000)
+        lanes = np.array([0, 7, 42, 99])
+        for attempt in (0, 1, 2):
+            a = small.attempt_outcomes(5, 0, attempt, lanes=lanes)
+            b = big.attempt_outcomes(5, 0, attempt, lanes=lanes)
+            for x, y in zip(a, b):
+                np.testing.assert_array_equal(x, y)
