@@ -1,0 +1,248 @@
+"""Personalized serving-plane benchmark: base + paged compressed deltas.
+
+Sweeps users x pool-size x compressor through ``repro.serve`` and pins the
+three properties the serving plane exists for:
+
+* **bitwise identity** — a batch where every slot applies its own user's
+  compressed delta from the pool decodes logits bit-for-bit equal to serving
+  each user's fully materialized personalized params through the same traced
+  forward (``bitident_*`` rows, asserted at prefill and every decode step);
+* **O(delta) residency** — per-user resident device cost is the user's
+  nonzero delta blocks, not a model copy: constant across a 10x user sweep
+  and orders of magnitude below the model bytes (``resident_o_delta`` row,
+  asserted);
+* **exact page accounting** — a pool miss charges exactly the wire payload's
+  ``nbytes`` to the ledger under ``serve/page_in``; a hit charges zero; an
+  eviction brings the next acquire back as a full-price miss
+  (``pool_hit_miss`` row, asserted).
+
+Byte columns are deterministic (seeded keys, deterministic LRU), so the
+committed baseline pins them at 0% drift tolerance like every other bench.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import device_live_bytes, host_peak_rss_mb, timed
+from repro.comm import PAGE_IN_TAG
+from repro.configs import get_config
+from repro.core.compressors import make_compressor
+from repro.models import init_params
+from repro.serve import (BlockPool, DeltaServeEngine, DeltaStore,
+                         PersonalizedBatcher, personalize_leaves)
+from repro.training.serving import Request
+
+BLOCK = 4096
+ARCH = "h2o-danube-1.8b"
+
+COMPRESSORS = {
+    "topk": lambda: make_compressor("top_k", k_frac=0.01),
+    "qsgd8": lambda: make_compressor("qsgd", bits=8),
+}
+
+
+def _smoke() -> bool:
+    return os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+
+def _base():
+    cfg = get_config(ARCH).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _store(params, comp_name: str, n_users: int,
+           match=("norm",), scale: float = 0.05) -> DeltaStore:
+    store = DeltaStore(params, COMPRESSORS[comp_name](), block_size=BLOCK,
+                       seed=7)
+    key = jax.random.PRNGKey(1)
+    for uid in range(n_users):
+        store.put(uid, personalize_leaves(params, jax.random.fold_in(key, uid),
+                                          match=match, scale=scale))
+    return store
+
+
+def _page_in_bytes(store: DeltaStore) -> int:
+    return store.ledger.bytes_by_tag().get(PAGE_IN_TAG, 0)
+
+
+# ---------------------------------------------------------------------------
+# bitwise identity: delta-applied engine == materialized personalized params
+# ---------------------------------------------------------------------------
+def _bitident_rows(cfg, params):
+    rows = []
+    n_users, steps = 3, 4
+    for comp_name in ("topk", "qsgd8"):
+        store = _store(params, comp_name, n_users)
+        pool = BlockPool(store, capacity_blocks=64)
+        eng = DeltaServeEngine(cfg, store, max_len=32)
+        tables = np.stack([pool.acquire(u).table for u in range(n_users)])
+        toks = np.arange(1, 1 + n_users * 5, dtype=np.int32).reshape(n_users, 5)
+
+        logits, cache = eng.prefill(pool, tables, toks)
+        eff = eng.eff_blocks_for(
+            [store.personalized_params(u) for u in range(n_users)])
+        lm, cm = eng.prefill_materialized(eff, toks)
+        assert np.asarray(logits).tobytes() == np.asarray(lm).tobytes(), \
+            (comp_name, "prefill")
+        tok = np.asarray(jnp.argmax(logits[:, -1, :cfg.vocab_size],
+                                    -1))[:, None].astype(np.int32)
+        for s in range(steps):
+            logits, cache = eng.decode(pool, tables, tok, cache)
+            lm, cm = eng.decode_materialized(eff, tok, cm)
+            assert np.asarray(logits).tobytes() == np.asarray(lm).tobytes(), \
+                (comp_name, "decode", s)
+            tok = np.asarray(jnp.argmax(logits[:, -1, :cfg.vocab_size],
+                                        -1))[:, None].astype(np.int32)
+
+        def one_decode(eng=eng, pool=pool, tables=tables, tok=tok,
+                       cache=cache):
+            out, _ = eng.decode(pool, tables, tok, cache)
+            jax.block_until_ready(out)
+
+        us = timed(one_decode, repeats=3, warmup=1)
+        rows.append((f"serve/bitident_{comp_name}", us,
+                     f"bytes={store.total_payload_bytes()};users={n_users};"
+                     f"steps=1+{steps};bitwise=True"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# residency: O(delta blocks) per user, not O(model), across a 10x user sweep
+# ---------------------------------------------------------------------------
+def _measure_residency(params, n_users: int):
+    """(blocks-per-user, device-bytes-delta) for paging ``n_users`` into a
+    right-sized pool.  Scoped as a function so each sweep point's arrays die
+    before the next measurement (gc first: live-array diffs must not see
+    frees from a previous point)."""
+    import gc
+
+    store = _store(params, "topk", n_users)
+    probe = BlockPool(store, capacity_blocks=store.layout.n_buckets)
+    bpu = probe.acquire(0).n_blocks       # nonzero delta blocks per user
+    del probe
+    gc.collect()
+    before = device_live_bytes()
+    pool = BlockPool(store, capacity_blocks=n_users * bpu)
+    for u in range(n_users):
+        pool.acquire(u)
+    jax.block_until_ready(pool.blocks)
+    dev = device_live_bytes() - before
+    assert pool.resident_blocks == n_users * bpu, \
+        (pool.resident_blocks, n_users, bpu)
+    return bpu, dev
+
+
+def _residency_rows(cfg, params):
+    model_bytes = 4 * sum(int(np.prod(l.shape))
+                          for l in jax.tree_util.tree_leaves(params))
+    sweep = (4, 40)                       # the asserted 10x user sweep
+    per_user_blocks, per_user_dev = [], []
+    for n_users in sweep:
+        bpu, dev = _measure_residency(params, n_users)
+        per_user_blocks.append(bpu)
+        per_user_dev.append(dev / n_users)
+    # per-user residency is constant in the number of users ...
+    assert per_user_blocks[0] == per_user_blocks[1], per_user_blocks
+    analytic = per_user_blocks[0] * BLOCK * 4
+    # ... matches the analytic nonzero-block cost (the +1 shared zero row
+    # amortizes across users) ...
+    for dev_pu, n_users in zip(per_user_dev, sweep):
+        assert abs(dev_pu - analytic) <= 2 * BLOCK * 4 / n_users + 1024, \
+            (dev_pu, analytic)
+    # ... and is far below a per-user model copy
+    assert analytic * 10 < model_bytes, (analytic, model_bytes)
+    return [
+        ("serve/resident_o_delta", 0.0,
+         f"bytes={analytic};model_bytes={model_bytes};"
+         f"users_sweep={sweep[0]}->{sweep[1]};blocks_per_user="
+         f"{per_user_blocks[0]};copy_ratio={model_bytes / analytic:.1f};"
+         f"peak_rss_mb={host_peak_rss_mb():.0f}")]
+
+
+# ---------------------------------------------------------------------------
+# page accounting: miss == payload.nbytes, hit == 0, evict -> full-price miss
+# ---------------------------------------------------------------------------
+def _pool_rows(cfg, params):
+    store = _store(params, "topk", 3)
+    bpu = BlockPool(store, capacity_blocks=64).acquire(0).n_blocks
+    pool = BlockPool(store, capacity_blocks=2 * bpu)   # two users fit
+
+    b0 = _page_in_bytes(store)
+    pool.acquire(0)                                    # miss
+    miss_cost = _page_in_bytes(store) - b0
+    assert miss_cost == store.nbytes(0), (miss_cost, store.nbytes(0))
+    pool.release(0)
+
+    b1 = _page_in_bytes(store)
+    pool.acquire(0)                                    # hit
+    assert _page_in_bytes(store) - b1 == 0
+    pool.release(0)
+
+    pool.acquire(1); pool.release(1)
+    pool.acquire(2); pool.release(2)                   # evicts user 0
+    assert pool.evictions >= 1 and not pool.is_resident(0)
+    b2 = _page_in_bytes(store)
+    pool.acquire(2)                                    # still resident: hit
+    assert _page_in_bytes(store) - b2 == 0
+    b3 = _page_in_bytes(store)
+    pool.acquire(0)                                    # evicted: full miss
+    assert _page_in_bytes(store) - b3 == store.nbytes(0)
+    return [
+        ("serve/pool_hit_miss", 0.0,
+         f"bytes={_page_in_bytes(store)};hits={pool.hits};"
+         f"misses={pool.misses};evictions={pool.evictions};exact=True")]
+
+
+# ---------------------------------------------------------------------------
+# sweep: users x pool-size x compressor through the continuous batcher
+# ---------------------------------------------------------------------------
+def _sweep_rows(cfg, params, smoke: bool):
+    grid = [(6, "fit", "topk")]
+    if not smoke:
+        grid += [(6, "tight", "topk"), (12, "fit", "qsgd8"),
+                 (12, "tight", "qsgd8")]
+    rows = []
+    for n_users, sizing, comp_name in grid:
+        store = _store(params, comp_name, n_users)
+        bpu = BlockPool(store, capacity_blocks=store.layout.n_buckets) \
+            .acquire(0).n_blocks
+        cap = n_users * bpu if sizing == "fit" else max(2, n_users // 2) * bpu
+        pool = BlockPool(store, capacity_blocks=cap)
+        b = PersonalizedBatcher(cfg, store, pool, n_slots=2, max_len=64)
+        for rid in range(2 * n_users):
+            b.submit(Request(rid=rid, prompt=np.array([3, 4, 5], np.int32),
+                             max_new=4, user_id=rid % n_users))
+        t_us = timed(lambda: b.run(max_ticks=500), repeats=1, warmup=0)
+        assert b.stats.completed == 2 * n_users
+        # one jitted decode serves every user: no per-user recompile
+        sizes = b.engine.compile_cache_sizes()
+        assert sizes["decode"] == 1, sizes
+        hit_rate = pool.hits / max(1, pool.hits + pool.misses)
+        rows.append(
+            (f"serve/sweep_u{n_users}_{sizing}_{comp_name}", t_us,
+             f"bytes={pool.bytes_paged_in};hits={pool.hits};"
+             f"misses={pool.misses};evictions={pool.evictions};"
+             f"hit_rate={hit_rate:.2f};tokens={b.stats.tokens_out};"
+             f"pool_blocks={cap}"))
+    return rows
+
+
+def run(smoke: bool = False):
+    smoke = smoke or _smoke()
+    cfg, params = _base()
+    rows = []
+    rows += _bitident_rows(cfg, params)
+    rows += _residency_rows(cfg, params)
+    rows += _pool_rows(cfg, params)
+    rows += _sweep_rows(cfg, params, smoke)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

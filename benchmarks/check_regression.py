@@ -30,7 +30,8 @@ BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 DEFAULT_PAIRS = (("BENCH_comm.json", "BENCH_comm.json"),
                  ("BENCH_hier.json", "BENCH_hier.json"),
                  ("BENCH_faults.json", "BENCH_faults.json"),
-                 ("BENCH_cohort.json", "BENCH_cohort.json"))
+                 ("BENCH_cohort.json", "BENCH_cohort.json"),
+                 ("BENCH_serve.json", "BENCH_serve.json"))
 
 
 def load_rows(path: str) -> dict:

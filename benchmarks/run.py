@@ -4,9 +4,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  The §Roofline harness
 (benchmarks/roofline.py) and the multi-pod dry-run (repro.launch.dryrun) are
 separate long-running entries — this file covers the paper-table benchmarks.
 
-The comm, hier, faults and cohort rows are additionally written to
+The comm, hier, faults, cohort and serve rows are additionally written to
 ``BENCH_comm.json`` / ``BENCH_hier.json`` / ``BENCH_faults.json`` /
-``BENCH_cohort.json``
+``BENCH_cohort.json`` / ``BENCH_serve.json``
 (machine-readable: name, wall-us, bytes) so the codec/transport/
 aggregation-tree/robustness perf trajectory is tracked across PRs instead of
 living only in stdout.
@@ -38,7 +38,7 @@ def main() -> None:
     from benchmarks import bench_cohort, bench_comm, bench_efbv
     from benchmarks import bench_faults, bench_fedp3, bench_hier
     from benchmarks import bench_kernels, bench_scafflix, bench_scafflix_nn
-    from benchmarks import bench_sppm, bench_symwanda
+    from benchmarks import bench_serve, bench_sppm, bench_symwanda
     from benchmarks.common import emit, module_trace, now_s, trace_dir
     from repro.obs import trace as obs_trace
 
@@ -47,6 +47,7 @@ def main() -> None:
         ("hier(aggregation-trees,Ch.5)", bench_hier),
         ("faults(robustness)", bench_faults),
         ("cohort(million-client)", bench_cohort),
+        ("serve(personalized-deltas)", bench_serve),
         ("efbv(Fig2.2)", bench_efbv),
         ("scafflix(Fig3.1/3.3)", bench_scafflix),
         ("scafflix_nn(Fig3.2)", bench_scafflix_nn),
@@ -60,6 +61,7 @@ def main() -> None:
         id(bench_hier): ("BENCH_HIER_JSON", "BENCH_hier.json"),
         id(bench_faults): ("BENCH_FAULTS_JSON", "BENCH_faults.json"),
         id(bench_cohort): ("BENCH_COHORT_JSON", "BENCH_cohort.json"),
+        id(bench_serve): ("BENCH_SERVE_JSON", "BENCH_serve.json"),
     }
     print("name,us_per_call,derived")
     for label, mod in modules:

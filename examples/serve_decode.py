@@ -53,13 +53,13 @@ def main():
     print(f"prefill {args.batch}x{maxlen} in {time.time()-t0:.2f}s")
 
     step_fn = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
-    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)
     outs = [[] for _ in range(args.batch)]
     done = np.zeros(args.batch, bool)
     t0 = time.time()
     for step in range(args.gen):
         logits, cache = step_fn(params, tok, cache)
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)
         for i in range(args.batch):
             t = int(tok[i, 0])
             if not done[i]:

@@ -35,9 +35,10 @@ from repro.comm.codecs import (DEFAULT_TILE, Chunk, Payload, PayloadError,
                                encoded_bits, roundtrip_equal, seal_payload,
                                split_payload, stream_roundtrip_equal,
                                validate_payload, verify_payload)
-from repro.comm.ledger import (BROADCAST_TAG, RETRY_TAG, UPLOAD_TAG,
-                               WIRE_SCHEME_TAGS, CommLedger, CommRecord,
-                               crosscheck_hlo, known_tags, register_tag)
+from repro.comm.ledger import (BROADCAST_TAG, PAGE_IN_TAG, PAGE_OUT_TAG,
+                               RETRY_TAG, UPLOAD_TAG, WIRE_SCHEME_TAGS,
+                               CommLedger, CommRecord, crosscheck_hlo,
+                               known_tags, register_tag)
 from repro.comm.topology import (DEFAULT_PROFILE, DEFAULT_TILE_BYTES, PRESETS,
                                  CodecProfile, Link, Topology, get_topology,
                                  norm_ppf, pipelined_time_s, ring_parts_s,
@@ -54,7 +55,8 @@ __all__ = [
     "BucketLayout", "bucketize", "bucketize_groups", "debucketize",
     "debucketize_groups", "DEFAULT_BUCKET_SIZE",
     "CommLedger", "CommRecord", "crosscheck_hlo",
-    "RETRY_TAG", "UPLOAD_TAG", "BROADCAST_TAG", "WIRE_SCHEME_TAGS",
+    "RETRY_TAG", "UPLOAD_TAG", "BROADCAST_TAG", "PAGE_IN_TAG", "PAGE_OUT_TAG",
+    "WIRE_SCHEME_TAGS",
     "register_tag", "known_tags",
     "Link", "Topology", "PRESETS", "get_topology", "CodecProfile",
     "pipelined_time_s", "stream_pipeline_s", "ring_parts_s", "ring_time_s",

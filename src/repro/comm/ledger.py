@@ -39,6 +39,8 @@ from repro.comm.topology import Topology
 RETRY_TAG = "retry"          # retransmissions after a drop / checksum failure
 UPLOAD_TAG = "upload"        # leaf -> aggregator payloads
 BROADCAST_TAG = "broadcast"  # aggregator -> leaf model pushes
+PAGE_IN_TAG = "serve/page_in"    # delta store -> serving block pool (a miss)
+PAGE_OUT_TAG = "serve/page_out"  # trainer -> delta store persist (a put)
 WIRE_SCHEME_TAGS = frozenset(
     {"dense", "sparse_idx32", "sparse_block", "sparse_bitmap", "quant"})
 
@@ -52,7 +54,8 @@ def register_tag(tag: str) -> str:
 
 
 def known_tags() -> frozenset:
-    return (frozenset({RETRY_TAG, UPLOAD_TAG, BROADCAST_TAG})
+    return (frozenset({RETRY_TAG, UPLOAD_TAG, BROADCAST_TAG,
+                       PAGE_IN_TAG, PAGE_OUT_TAG})
             | WIRE_SCHEME_TAGS | frozenset(_RUNTIME_TAGS))
 
 

@@ -50,11 +50,11 @@ def main():
     logits, cache = jax.jit(
         lambda p, b: prefill(p, cfg, b, cache_len=16 + args.gen + 1))(params, batch)
     step = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
-    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)
     toks = []
     for _ in range(args.gen):
         logits, cache = step(params, tok, cache)
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)
         toks.append(np.asarray(tok[:, 0]))
     print("decoded:", np.stack(toks, 1).tolist())
 

@@ -254,6 +254,25 @@ class MetricsRegistry:
                         m.total if isinstance(m, Counter) else m.value)
         return out
 
+    def observe_serve(self, stats, step: Optional[int] = None) -> None:
+        """Serving-path bridge: a ``training.serving.ServeStats`` snapshot
+        lands as ``serve/*`` gauges next to the pool's ``serve/pool/*``
+        counters, so the obs report covers the serving plane."""
+        for key in ("admitted", "completed", "decode_steps", "prefills",
+                    "tokens_out"):
+            self.gauge(f"serve/{key}").set(float(getattr(stats, key)),
+                                           step=step)
+
+    def serve_stats(self) -> Dict[str, float]:
+        """The ``serve/*`` totals/values (empty when nothing served)."""
+        out = {}
+        with self._lock:
+            for name, m in self._metrics.items():
+                if name.startswith("serve/"):
+                    out[name[len("serve/"):]] = (
+                        m.total if isinstance(m, Counter) else m.value)
+        return out
+
     def observe_train_step(self, step: int, metrics: Dict[str, float]) -> None:
         """Loss/grad-norm (host-fetched floats) next to the byte series."""
         for k, v in metrics.items():

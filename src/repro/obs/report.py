@@ -40,8 +40,12 @@ from repro.obs.trace import Span, load_jsonl
 PHASES = ("pack", "encode", "allreduce", "decode", "adopt")
 
 # ledger tags that have no encode-span counterpart in the trace: shown in the
-# byte audit but exempt from the exact-match requirement
-UNTRACED_TAGS = frozenset({"retry"})
+# byte audit but exempt from the exact-match requirement (serve/page_in is a
+# decode-side transfer; serve/page_out is a store write, not an upload)
+UNTRACED_TAGS = frozenset({"retry", "serve/page_in", "serve/page_out"})
+
+# serving-path spans (training.serving.ContinuousBatcher instrumentation)
+_SERVE_SPANS = ("serve/admit", "serve/prefill", "serve/decode")
 
 # span-name prefixes -> canonical round phase
 _PHASE_PREFIXES = (
@@ -169,6 +173,31 @@ def modeled_phase_seconds(sync, n_params: int,
     return phases, level_bytes
 
 
+def _serve_stats_from_metrics(mdoc: dict) -> Dict[str, float]:
+    """``serve/*`` totals from a metrics JSON — either the ``serve_stats``
+    extra a bench exports, or the raw metric entries from a traced run."""
+    ss = mdoc.get("serve_stats")
+    if ss:
+        return {str(k): float(v) for k, v in ss.items()}
+    out: Dict[str, float] = {}
+    for m in mdoc.get("metrics", []):
+        name = str(m.get("name", ""))
+        if name.startswith("serve/"):
+            out[name[len("serve/"):]] = float(
+                m.get("total", m.get("value", 0.0)) or 0.0)
+    return out
+
+
+def _serve_span_table(spans: List[Span]) -> Dict[str, Tuple[int, float]]:
+    """(count, total seconds) per serving span name."""
+    out: Dict[str, Tuple[int, float]] = {}
+    for s in spans:
+        if s.name in _SERVE_SPANS:
+            n, tot = out.get(s.name, (0, 0.0))
+            out[s.name] = (n + 1, tot + s.dur_us / 1e6)
+    return out
+
+
 def _fault_stats_from_metrics(mdoc: dict) -> Dict[str, float]:
     """``faults/*`` totals from a metrics JSON — either the ``fault_stats``
     extra a bench exports, or the raw metric entries from a traced run."""
@@ -228,6 +257,7 @@ def build_report(trace_path: str, metrics_path: Optional[str] = None,
 
     ledger_bytes: Optional[Dict[str, float]] = None
     fault_stats: Dict[str, float] = {}
+    serve_stats: Dict[str, float] = {}
     if metrics_path:
         with open(metrics_path) as f:
             mdoc = json.load(f)
@@ -235,6 +265,8 @@ def build_report(trace_path: str, metrics_path: Optional[str] = None,
         if lb:
             ledger_bytes = {str(k): float(v) for k, v in lb.items()}
         fault_stats = _fault_stats_from_metrics(mdoc)
+        serve_stats = _serve_stats_from_metrics(mdoc)
+    serve_spans = _serve_span_table(spans)
 
     lines = []
     title = meta.get("label") or trace_path
@@ -312,6 +344,26 @@ def build_report(trace_path: str, metrics_path: Optional[str] = None,
             lines.append(f"    degraded round_time="
                          f"{fault_stats['round_time_s'] * 1e3:.3f} ms")
 
+    if serve_spans or serve_stats:
+        lines.append("")
+        lines.append("  serving path (continuous batcher):")
+        for name in _SERVE_SPANS:
+            if name in serve_spans:
+                n, tot = serve_spans[name]
+                lines.append(f"    {name:<14} n={n:<5} "
+                             f"total={tot * 1e3:.3f} ms")
+        sched = [(k, serve_stats[k]) for k in
+                 ("admitted", "completed", "prefills", "decode_steps",
+                  "tokens_out") if k in serve_stats]
+        if sched:
+            lines.append("    " + "  ".join(f"{k}={int(round(v))}"
+                                            for k, v in sched))
+        pool = {k[len("pool/"):]: v for k, v in serve_stats.items()
+                if k.startswith("pool/")}
+        if pool:
+            lines.append("    pool  " + "  ".join(
+                f"{k}={int(round(v))}" for k, v in sorted(pool.items())))
+
     result = {
         "measured_s": measured, "modeled_s": modeled,
         "measured_total_s": measured_total,
@@ -319,6 +371,9 @@ def build_report(trace_path: str, metrics_path: Optional[str] = None,
         "trace_bytes": trace_bytes, "ledger_bytes": ledger_bytes,
         "bytes_match": bytes_match, "n_spans": len(spans),
         "fault_stats": fault_stats or None,
+        "serve_stats": serve_stats or None,
+        "serve_spans": {k: {"n": n, "total_s": t}
+                        for k, (n, t) in serve_spans.items()} or None,
     }
     return "\n".join(lines) + "\n", result
 

@@ -1,0 +1,29 @@
+"""repro.serve — the personalized-model serving plane.
+
+Serving millions of Scafflix/FedP3-personalized models at a per-user memory
+cost of kilobytes: one base model on device, per-user deltas stored as
+compressed wire payloads (``repro.comm`` codecs), paged into a fixed block
+pool on demand, and applied per-batch-slot inside one jitted forward.
+
+  deltas   DeltaStore: base blocks + certified per-user delta payloads,
+           byte-costed under serve/page_out / serve/page_in ledger tags
+  pool     BlockPool: fixed-capacity device pool of decoded delta blocks,
+           LRU eviction + in-flight pins, hit/miss/paged-byte metrics
+  engine   DeltaServeEngine: batched multi-user prefill/decode (per-slot
+           delta gather+apply, no per-user recompile) and
+           PersonalizedBatcher wiring it into the continuous batcher
+"""
+from repro.serve.deltas import (DEFAULT_BLOCK, DeltaCertificationError,
+                                DeltaStore, delta_blocks, delta_from_params,
+                                params_from_delta, personalize_leaves,
+                                user_key)
+from repro.serve.engine import DeltaServeEngine, PersonalizedBatcher
+from repro.serve.pool import (ZERO_ROW, BlockPool, PoolEntry, PoolExhausted)
+
+__all__ = [
+    "DEFAULT_BLOCK", "DeltaStore", "DeltaCertificationError",
+    "delta_from_params", "params_from_delta", "delta_blocks",
+    "personalize_leaves", "user_key",
+    "BlockPool", "PoolEntry", "PoolExhausted", "ZERO_ROW",
+    "DeltaServeEngine", "PersonalizedBatcher",
+]

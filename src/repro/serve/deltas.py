@@ -1,0 +1,187 @@
+"""Per-user personalized deltas stored as wire payloads.
+
+Scafflix / FedP3 style personalization produces a *distinct* model per
+client; a serving fleet cannot hold a full weight copy per user.  The delta
+store keeps ONE base model plus, per user, the *wire payload* of a
+compressed delta — the same packed planes (``repro.comm.codecs``) a trainer
+would upload, typically kilobytes.
+
+Coordinates: deltas live in the bucketized f32 space of ``comm.buckets`` —
+the base tree is flattened once into ``(n_blocks, block_size)`` blocks and a
+user's delta is the blockwise difference ``personalized - base``.  Blocks
+are the pool pager's page unit (``serve.pool``), so a user whose
+personalization touches a few leaves decodes to a few nonzero blocks.
+
+Certification: ``delta_from_params`` refuses to store a payload unless
+``decode(payload)`` is bit-for-bit equal to the compressor's own carrier
+``c(key, delta)`` — the stored artifact provably loses nothing beyond the
+compression itself.  Byte costs land on a :class:`CommLedger` under the
+registered tags ``serve/page_out`` (trainer -> store, on ``put``) and
+``serve/page_in`` (store -> pool, charged by the pager on a miss).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.buckets import BucketLayout, bucketize, debucketize
+from repro.comm.codecs import Payload, decode, encode
+from repro.comm.ledger import PAGE_OUT_TAG, CommLedger
+from repro.core.compressors import Compressor, make_compressor
+
+# Delta-block coordinates per page.  A multiple of every codec granule in the
+# repo (quantizer blocks 256/512/2048, 32-bit mask words, Pallas QBLOCK=512),
+# so page boundaries always align with wire-plane boundaries; small enough
+# that a few-leaf personalization touches a few pages of a reduced config.
+DEFAULT_BLOCK = 4096
+
+
+class DeltaCertificationError(RuntimeError):
+    """decode(payload) disagreed with the compressor's carrier bit-for-bit."""
+
+
+def user_key(seed: int, user_id: int):
+    """The per-user compression key: fold_in(PRNGKey(seed), user_id).
+
+    Deterministic per (seed, user) so stochastic codecs (qsgd) round the same
+    way on re-encode and certification can compare bitwise.
+    """
+    return jax.random.fold_in(jax.random.PRNGKey(int(seed)), int(user_id))
+
+
+def delta_from_params(base_blocks, layout: BucketLayout, personalized,
+                      compressor: Compressor, key) -> Payload:
+    """Diff ``personalized`` against the base in block space, compress, pack.
+
+    Returns the wire :class:`Payload`, certified bit-exact: the payload's
+    decode equals ``compressor(key, delta)`` byte-for-byte, or raises
+    :class:`DeltaCertificationError`.
+    """
+    pers_blocks, p_layout = bucketize(personalized, layout.bucket_size)
+    if p_layout.shapes != layout.shapes:
+        raise ValueError("personalized tree shape mismatch vs base: "
+                         f"{p_layout.shapes} != {layout.shapes}")
+    delta = (pers_blocks - base_blocks).reshape(-1)
+    payload = encode(compressor, key, delta)
+    carrier = np.asarray(compressor(key, delta))
+    decoded = np.asarray(decode(payload))
+    # elementwise exact, the same certificate as codecs.roundtrip_equal
+    # (a quant dequant may emit -0.0 where the carrier has +0.0 — equal)
+    if decoded.shape != carrier.shape or not np.all(decoded == carrier):
+        raise DeltaCertificationError(
+            f"decode(encode(delta)) != compressor carrier for {compressor.name}")
+    return payload
+
+
+def delta_blocks(payload: Payload, layout: BucketLayout) -> np.ndarray:
+    """Decode a stored payload back to ``(n_blocks, block_size)`` f32 blocks."""
+    carrier = np.asarray(decode(payload), dtype=np.float32)
+    return carrier.reshape(layout.n_buckets, layout.bucket_size)
+
+
+def params_from_delta(base_blocks, layout: BucketLayout, payload: Payload,
+                      dtype=None):
+    """Materialize the full personalized tree: debucketize(base + delta).
+
+    The serving engine never calls this per-request — it applies the decoded
+    blocks in the forward pass (``serve.engine``).  This is the oracle the
+    bench certifies the engine against, and the escape hatch for exporting a
+    user's model.
+    """
+    carrier = jnp.asarray(delta_blocks(payload, layout))
+    return debucketize(base_blocks + carrier, layout, dtype=dtype)
+
+
+class DeltaStore:
+    """Base blocks + per-user compressed delta payloads + the byte ledger.
+
+    The store is host-side: payloads are packed numpy planes (what a
+    parameter server would hold); only the base blocks live on device.
+    ``put`` charges ``serve/page_out`` for the trainer->store write; the pool
+    pager charges ``serve/page_in`` on each miss it services from here.
+    """
+
+    def __init__(self, base_params, compressor: Optional[Compressor] = None,
+                 block_size: int = DEFAULT_BLOCK, seed: int = 0,
+                 ledger: Optional[CommLedger] = None):
+        self.base_blocks, self.layout = bucketize(base_params, block_size)
+        self.compressor = compressor or make_compressor("top_k", k_frac=0.01)
+        self.seed = int(seed)
+        self.ledger = ledger if ledger is not None else CommLedger()
+        self._payloads: Dict[int, Payload] = {}
+        self._events = 0
+
+    # -- identity -----------------------------------------------------------
+    def user_key(self, uid: int):
+        return user_key(self.seed, uid)
+
+    def __contains__(self, uid: int) -> bool:
+        return int(uid) in self._payloads
+
+    def __len__(self) -> int:
+        return len(self._payloads)
+
+    def user_ids(self) -> List[int]:
+        return sorted(self._payloads)
+
+    # -- write path ---------------------------------------------------------
+    def put(self, uid: int, personalized_params) -> Payload:
+        """Store user ``uid``'s model as a certified compressed delta."""
+        uid = int(uid)
+        payload = delta_from_params(self.base_blocks, self.layout,
+                                    personalized_params, self.compressor,
+                                    self.user_key(uid))
+        return self.put_payload(uid, payload)
+
+    def put_payload(self, uid: int, payload: Payload) -> Payload:
+        """Store a pre-encoded delta payload (e.g. straight off the uplink)."""
+        uid = int(uid)
+        self._payloads[uid] = payload
+        self.ledger.record(self._events, f"trainer->store/u{uid}",
+                           payload.nbytes, kind="inter", tag=PAGE_OUT_TAG)
+        self._events += 1
+        return payload
+
+    # -- read path ----------------------------------------------------------
+    def payload(self, uid: int) -> Payload:
+        return self._payloads[int(uid)]
+
+    def nbytes(self, uid: int) -> int:
+        return self._payloads[int(uid)].nbytes
+
+    def blocks(self, uid: int) -> np.ndarray:
+        """Decoded ``(n_blocks, block_size)`` delta blocks for ``uid``."""
+        return delta_blocks(self._payloads[int(uid)], self.layout)
+
+    def personalized_params(self, uid: int, dtype=None):
+        """Materialize the user's full tree (oracle / export path)."""
+        return params_from_delta(self.base_blocks, self.layout,
+                                 self._payloads[int(uid)], dtype=dtype)
+
+    def total_payload_bytes(self) -> int:
+        return sum(p.nbytes for p in self._payloads.values())
+
+
+def personalize_leaves(base_params, key, match: Iterable[str] = ("norm",),
+                       scale: float = 0.05):
+    """FedP3-style layer personalization: perturb only the leaves whose path
+    mentions one of ``match`` (personalized layers); everything else stays at
+    the base.  The resulting delta touches a handful of blocks — the regime
+    the block pool is built for.  Bench/test generator, not a training path.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(base_params)[0]
+    treedef = jax.tree_util.tree_structure(base_params)
+    pats = tuple(str(m).lower() for m in match)
+    leaves = []
+    for i, (path, leaf) in enumerate(flat):
+        name = jax.tree_util.keystr(path).lower()
+        if any(p in name for p in pats):
+            noise = jax.random.normal(jax.random.fold_in(key, i), leaf.shape,
+                                      jnp.float32)
+            leaf = (leaf.astype(jnp.float32)
+                    + scale * noise).astype(leaf.dtype)
+        leaves.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

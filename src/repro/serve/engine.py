@@ -1,0 +1,161 @@
+"""Batched multi-user forward: per-slot delta application inside one jit.
+
+One jitted prefill/decode pair serves *every* user.  Slot ``b``'s effective
+parameters are
+
+    eff_b = base_blocks + pool_blocks[table_b]          # (n_blocks, bs)
+    params_b = debucketize(eff_b)                       # the user's tree
+
+computed inside the jit from the shared ``(capacity+1, block)`` pool array
+and a per-slot int32 block table — a gather plus an add, no host syncs, no
+tracer branching (RL001/RL005-clean), and the jit signature is shape-static
+in users, so admitting a new user never recompiles.
+
+``prefill_eff``/``decode_eff`` take fully materialized per-slot blocks
+instead of (pool, tables); they share the exact same traced forward, which
+is what lets ``bench_serve`` certify the delta path bitwise against serving
+a user's materialized personalized params.
+
+:class:`PersonalizedBatcher` plugs this engine into the continuous batcher:
+admission pins the user's delta in the pool (paging it in on a miss) and
+slot retirement releases the pin.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.buckets import bucketize_groups, debucketize_groups
+from repro.serve.deltas import DeltaStore
+from repro.serve.pool import BlockPool
+from repro.training.serving import ContinuousBatcher, Request
+
+
+def _make_forward(cfg, layout, max_len: int):
+    """Trace-once factory: (prefill_eff, decode_eff) over per-slot blocks."""
+    from repro.models import decode_step, prefill as model_prefill
+
+    def slot_params(eff_blocks):                  # (B, n_blocks, bs) -> trees
+        return debucketize_groups(eff_blocks, layout)
+
+    def prefill_eff(eff_blocks, tokens):
+        params_b = slot_params(eff_blocks)
+
+        def one(p, t):
+            logits, cache = model_prefill(p, cfg, {"tokens": t[None]},
+                                          cache_len=max_len)
+            return logits[0], cache
+
+        return jax.vmap(one)(params_b, tokens)
+
+    def decode_eff(eff_blocks, tok, cache):
+        params_b = slot_params(eff_blocks)
+
+        def one(p, t, c):
+            logits, c2 = decode_step(p, cfg, t[None], c)
+            return logits[0], c2
+
+        return jax.vmap(one)(params_b, tok, cache)
+
+    return prefill_eff, decode_eff
+
+
+class DeltaServeEngine:
+    """Jitted prefill/decode where each batch slot applies its own delta."""
+
+    def __init__(self, cfg, store: DeltaStore, max_len: int = 128):
+        if getattr(cfg, "enc_layers", 0) or getattr(cfg, "vision_tokens", 0):
+            raise NotImplementedError(
+                "DeltaServeEngine serves decoder-only configs")
+        self.cfg = cfg
+        self.store = store
+        self.layout = store.layout
+        self.max_len = int(max_len)
+        prefill_eff, decode_eff = _make_forward(cfg, self.layout, self.max_len)
+        self._prefill_eff = jax.jit(prefill_eff)
+        self._decode_eff = jax.jit(decode_eff)
+        # The delta path computes eff inside the SAME traced forward.
+        self._prefill_delta = jax.jit(
+            lambda base, pool, tables, toks:
+                prefill_eff(base[None] + pool[tables], toks))
+        self._decode_delta = jax.jit(
+            lambda base, pool, tables, tok, cache:
+                decode_eff(base[None] + pool[tables], tok, cache))
+
+    # -- delta path (production) -------------------------------------------
+    def prefill(self, pool: BlockPool, tables, tokens):
+        """tables (B, n_blocks) int32; tokens (B, L) int32."""
+        return self._prefill_delta(self.store.base_blocks, pool.blocks,
+                                   jnp.asarray(tables), jnp.asarray(tokens))
+
+    def decode(self, pool: BlockPool, tables, tok, cache):
+        return self._decode_delta(self.store.base_blocks, pool.blocks,
+                                  jnp.asarray(tables), jnp.asarray(tok),
+                                  cache)
+
+    # -- materialized path (oracle / full-copy serving) ---------------------
+    def prefill_materialized(self, eff_blocks, tokens):
+        return self._prefill_eff(eff_blocks, jnp.asarray(tokens))
+
+    def decode_materialized(self, eff_blocks, tok, cache):
+        return self._decode_eff(eff_blocks, jnp.asarray(tok), cache)
+
+    def eff_blocks_for(self, params_list: List) -> jnp.ndarray:
+        """Stack per-slot materialized trees -> (B, n_blocks, bs) blocks."""
+        stacked = jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls), *params_list)
+        blocks, layout = bucketize_groups(stacked, self.layout.bucket_size)
+        if layout.shapes != self.layout.shapes:
+            raise ValueError("materialized tree does not match store layout")
+        return blocks
+
+    def compile_cache_sizes(self) -> dict:
+        """Jit-cache entry counts — the no-per-user-recompile witness."""
+        return {"prefill": self._prefill_delta._cache_size(),
+                "decode": self._decode_delta._cache_size()}
+
+
+class PersonalizedBatcher(ContinuousBatcher):
+    """Continuous batcher whose slots each serve their own personalized user.
+
+    Admission ``acquire``s the request's ``user_id`` from the block pool
+    (page-in on a miss, pin while scheduled); retirement releases the pin
+    and zeroes the slot's block table.  Requests with ``user_id=None`` are
+    served on the bare base model (all-zero table, nothing pinned).
+    """
+
+    def __init__(self, cfg, store: DeltaStore, pool: BlockPool,
+                 n_slots: int = 4, max_len: int = 128,
+                 engine: Optional[DeltaServeEngine] = None):
+        self.store = store
+        self.pool = pool
+        self._engine_override = engine
+        self._tables = np.zeros((n_slots, store.layout.n_buckets), np.int32)
+        super().__init__(cfg, params=None, n_slots=n_slots, max_len=max_len)
+
+    # -- ContinuousBatcher hooks -------------------------------------------
+    def _build_model(self) -> None:
+        self.engine = (self._engine_override
+                       or DeltaServeEngine(self.cfg, self.store,
+                                           self.max_len))
+
+    def _model_prefill(self, batch):
+        return self.engine.prefill(self.pool, self._tables, batch["tokens"])
+
+    def _model_decode(self, tok):
+        return self.engine.decode(self.pool, self._tables, tok, self.cache)
+
+    def _on_admit(self, slot: int, req: Request) -> None:
+        if req.user_id is None:
+            self._tables[slot] = 0
+            return
+        entry = self.pool.acquire(req.user_id)
+        self._tables[slot] = entry.table
+
+    def _on_retire(self, slot: int, req: Request) -> None:
+        self._tables[slot] = 0
+        if req.user_id is not None:
+            self.pool.release(req.user_id)

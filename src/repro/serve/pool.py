@@ -1,0 +1,185 @@
+"""Fixed-capacity device-side pool of decoded delta blocks (the pager).
+
+The serving fleet's device memory holds ONE base model plus this pool; users
+page in and out of it the way pie's ``KvBlockStorage`` pages KV-cache blocks
+(SNIPPETS.md Snippet 1).  An entry is one user's set of *nonzero* decoded
+delta blocks — zero blocks all alias the reserved all-zero row 0, so a
+user's resident cost is O(nonzero delta blocks), not O(model blocks).
+
+Paging semantics:
+  * miss  — decode the stored wire payload host-side, copy the nonzero
+            blocks into free pool rows (host->device), charge exactly
+            ``payload.nbytes`` to the ledger under ``serve/page_in``;
+  * hit   — the user is already resident: zero decode work, zero bytes;
+  * evict — pages are clean (the payload is the durable copy), so eviction
+            just frees rows; stale device data is overwritten on reuse.
+
+Entries are LRU-ordered; ``acquire`` pins an entry for the lifetime of a
+batch slot and pinned entries are never evicted (``release`` unpins).  All
+residency / hit / miss / eviction / paged-byte counters flow into the
+``repro.obs`` metrics registry under ``serve/pool/*``.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.ledger import PAGE_IN_TAG
+from repro.serve.deltas import DeltaStore
+
+ZERO_ROW = 0  # reserved pool row: the shared all-zero delta block
+
+
+class PoolExhausted(RuntimeError):
+    """Not enough unpinned rows to page a user in — the pool is too small
+    for the live batch's working set."""
+
+
+@dataclass
+class PoolEntry:
+    """One resident user: which pool rows hold their nonzero blocks."""
+    user_id: int
+    rows: np.ndarray            # pool rows backing the nonzero blocks
+    table: np.ndarray           # (n_model_blocks,) int32 -> pool row (0=zero)
+    payload_nbytes: int
+    pins: int = 0
+
+    @property
+    def n_blocks(self) -> int:
+        return int(len(self.rows))
+
+
+class BlockPool:
+    """LRU pager over a ``(capacity+1, block_size)`` device block array."""
+
+    def __init__(self, store: DeltaStore, capacity_blocks: int,
+                 metrics=None, link: str = "store->pool"):
+        if capacity_blocks < 1:
+            raise ValueError("capacity_blocks must be >= 1")
+        self.store = store
+        self.capacity = int(capacity_blocks)
+        bs = store.layout.bucket_size
+        # row 0 is the shared zero block; it is never allocated or written.
+        self.blocks = jnp.zeros((self.capacity + 1, bs), jnp.float32)
+        self._free: List[int] = list(range(self.capacity, 0, -1))
+        self._entries: "OrderedDict[int, PoolEntry]" = OrderedDict()
+        self.link = link
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.bytes_paged_in = 0
+        self._events = 0
+        if metrics is None:
+            from repro.obs.metrics import registry as metrics
+        self.metrics = metrics
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def resident_blocks(self) -> int:
+        return self.capacity - len(self._free)
+
+    @property
+    def resident_bytes(self) -> int:
+        return self.resident_blocks * self.store.layout.bucket_size * 4
+
+    @property
+    def device_bytes(self) -> int:
+        """Allocated device footprint (fixed at construction)."""
+        return int(self.blocks.size) * 4
+
+    def is_resident(self, uid: int) -> bool:
+        return int(uid) in self._entries
+
+    def entry(self, uid: int) -> PoolEntry:
+        return self._entries[int(uid)]
+
+    def table_for(self, uid: int) -> np.ndarray:
+        return self._entries[int(uid)].table
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "bytes_paged_in": self.bytes_paged_in,
+                "resident_blocks": self.resident_blocks,
+                "resident_users": len(self._entries),
+                "pinned_users": sum(1 for e in self._entries.values()
+                                    if e.pins > 0)}
+
+    # -- paging -------------------------------------------------------------
+    def acquire(self, uid: int) -> PoolEntry:
+        """Pin user ``uid`` resident, paging them in on a miss."""
+        uid = int(uid)
+        entry = self._entries.get(uid)
+        if entry is not None:
+            self._entries.move_to_end(uid)
+            entry.pins += 1
+            self.hits += 1
+            self.metrics.counter("serve/pool/hits").inc()
+            self._note_residency()
+            return entry
+        return self._page_in(uid)
+
+    def release(self, uid: int) -> None:
+        """Unpin (entry stays resident until LRU-evicted)."""
+        entry = self._entries[int(uid)]
+        if entry.pins <= 0:
+            raise RuntimeError(f"release() without matching acquire() "
+                               f"for user {uid}")
+        entry.pins -= 1
+        self._note_residency()
+
+    def _page_in(self, uid: int) -> PoolEntry:
+        payload = self.store.payload(uid)
+        carrier = self.store.blocks(uid)                   # host decode
+        nz = np.flatnonzero(np.any(carrier != 0.0, axis=1))
+        rows = self._alloc(len(nz))
+        if len(nz):
+            self.blocks = self.blocks.at[jnp.asarray(rows)].set(
+                jnp.asarray(carrier[nz]))                  # host -> device
+        table = np.full(self.store.layout.n_buckets, ZERO_ROW, np.int32)
+        table[nz] = rows
+        entry = PoolEntry(uid, np.asarray(rows, np.int32), table,
+                          payload.nbytes, pins=1)
+        self._entries[uid] = entry
+        self.misses += 1
+        self.bytes_paged_in += payload.nbytes
+        self.store.ledger.record(self._events, f"{self.link}/u{uid}",
+                                 payload.nbytes, kind="intra", tag=PAGE_IN_TAG)
+        self._events += 1
+        self.metrics.counter("serve/pool/misses").inc()
+        self.metrics.counter("serve/pool/page_in_bytes").inc(payload.nbytes)
+        self._note_residency()
+        return entry
+
+    def _alloc(self, n: int) -> np.ndarray:
+        if n > self.capacity:
+            raise PoolExhausted(f"user needs {n} blocks; pool capacity is "
+                                f"{self.capacity}")
+        while len(self._free) < n:
+            if not self._evict_one():
+                raise PoolExhausted(
+                    f"need {n} free blocks, have {len(self._free)}; every "
+                    f"resident entry is pinned")
+        return np.asarray([self._free.pop() for _ in range(n)], np.int32)
+
+    def _evict_one(self) -> bool:
+        for uid, entry in self._entries.items():       # oldest first
+            if entry.pins == 0:
+                del self._entries[uid]
+                self._free.extend(int(r) for r in entry.rows)
+                self.evictions += 1
+                self.metrics.counter("serve/pool/evictions").inc()
+                return True
+        return False
+
+    def _note_residency(self) -> None:
+        self.metrics.gauge("serve/pool/resident_blocks").set(
+            self.resident_blocks)
+        self.metrics.gauge("serve/pool/resident_bytes").set(
+            self.resident_bytes)
+        self.metrics.gauge("serve/pool/resident_users").set(
+            len(self._entries))

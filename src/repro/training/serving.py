@@ -12,15 +12,27 @@ offsets are handled by left-padding prompts into the slot at prefill time and
 masking finished slots. Prefill for a refill batches all newly admitted
 requests together (prefill and decode alternate — the standard
 continuous-batching compromise without paged attention).
+
+Subclass hooks (``repro.serve.engine.PersonalizedBatcher`` uses all four):
+``_build_model`` constructs the jitted steps, ``_model_prefill`` /
+``_model_decode`` run them, ``_on_admit`` / ``_on_retire`` bracket a
+request's residency in a slot (page-in/pin and release in the personalized
+engine).  Admit/prefill/decode are traced as ``serve/*`` spans when the
+``repro.obs`` flight recorder is on, and ``publish_stats`` bridges
+:class:`ServeStats` into the obs metrics registry so
+``python -m repro.obs.report`` covers the serving path.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import trace as obs_trace
 
 
 @dataclass
@@ -29,6 +41,7 @@ class Request:
     prompt: np.ndarray          # (L,) int32
     max_new: int = 32
     stop_token: Optional[int] = None
+    user_id: Optional[int] = None   # personalized-delta user (None = base)
     generated: List[int] = field(default_factory=list)
     done: bool = False
 
@@ -46,20 +59,36 @@ class ContinuousBatcher:
     """Fixed-slot continuous batching over (prefill, decode_step)."""
 
     def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 128):
-        from repro.models import decode_step, prefill
-
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
-        self._prefill = jax.jit(
-            lambda p, b: prefill(p, cfg, b, cache_len=max_len))
-        self._decode = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
-        self.queue: List[Request] = []
+        self._build_model()
+        self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.cache = None
         self.next_tok = np.zeros((n_slots, 1), np.int32)
         self.stats = ServeStats()
+
+    # -- model hooks (overridden by delta-serving subclasses) ---------------
+    def _build_model(self) -> None:
+        from repro.models import decode_step, prefill
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, self.cfg, b, cache_len=self.max_len))
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(p, self.cfg, t, c))
+
+    def _model_prefill(self, batch):
+        return self._prefill(self.params, batch)
+
+    def _model_decode(self, tok):
+        return self._decode(self.params, tok, self.cache)
+
+    def _on_admit(self, slot: int, req: Request) -> None:
+        """A request was just placed into ``slot`` (before its prefill)."""
+
+    def _on_retire(self, slot: int, req: Request) -> None:
+        """``req`` in ``slot`` just finished (stop token or max_new)."""
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -78,30 +107,39 @@ class ContinuousBatcher:
         free = self._free_slots()
         if not free or not self.queue:
             return
-        for i in free:
-            if not self.queue:
-                break
-            self.slots[i] = self.queue.pop(0)
-        live = [(i, r) for i, r in enumerate(self.slots) if r is not None and not r.done]
-        if not live:
-            return
-        ctxs = [np.concatenate([r.prompt, np.asarray(r.generated, np.int32)])
-                for _, r in live]
-        maxlen = max(len(c) for c in ctxs)
-        batch_tokens = np.zeros((self.n_slots, maxlen), np.int32)
-        for (i, r), c in zip(live, ctxs):
-            batch_tokens[i, maxlen - len(c):] = c
-        batch = {"tokens": jnp.asarray(batch_tokens)}
-        if self.cfg.enc_layers:
-            batch["src_embeds"] = jnp.zeros(
-                (self.n_slots, 8, self.cfg.enc_d_model or self.cfg.d_model))
-        if self.cfg.vision_tokens:
-            batch["vision_embeds"] = jnp.zeros(
-                (self.n_slots, self.cfg.vision_tokens, self.cfg.d_model))
-        logits, self.cache = self._prefill(self.params, batch)
-        self.next_tok = np.asarray(
-            jnp.argmax(logits[:, -1, :self.cfg.vocab_size], -1))[:, None].astype(np.int32)
-        self.stats.prefills += 1
+        with obs_trace.span("serve/admit") as sp:
+            n_new = 0
+            for i in free:
+                if not self.queue:
+                    break
+                self.slots[i] = self.queue.popleft()
+                self._on_admit(i, self.slots[i])
+                n_new += 1
+            live = [(i, r) for i, r in enumerate(self.slots)
+                    if r is not None and not r.done]
+            sp.tag(new=n_new, live=len(live))
+            if not live:
+                return
+            ctxs = [np.concatenate([r.prompt,
+                                    np.asarray(r.generated, np.int32)])
+                    for _, r in live]
+            maxlen = max(len(c) for c in ctxs)
+            batch_tokens = np.zeros((self.n_slots, maxlen), np.int32)
+            for (i, r), c in zip(live, ctxs):
+                batch_tokens[i, maxlen - len(c):] = c
+            batch = {"tokens": jnp.asarray(batch_tokens)}
+            if self.cfg.enc_layers:
+                batch["src_embeds"] = jnp.zeros(
+                    (self.n_slots, 8, self.cfg.enc_d_model or self.cfg.d_model))
+            if self.cfg.vision_tokens:
+                batch["vision_embeds"] = jnp.zeros(
+                    (self.n_slots, self.cfg.vision_tokens, self.cfg.d_model))
+            with obs_trace.span("serve/prefill", tokens=int(maxlen)):
+                logits, self.cache = self._model_prefill(batch)
+            self.next_tok = np.asarray(
+                jnp.argmax(logits[:, -1, :self.cfg.vocab_size],
+                           -1))[:, None].astype(np.int32)
+            self.stats.prefills += 1
 
     # -- decode --------------------------------------------------------------
     def step(self) -> int:
@@ -109,11 +147,12 @@ class ContinuousBatcher:
         live slots. Returns the number of live requests."""
         if self._free_slots() and self.queue:
             self._admit()
-        live = [i for i, r in enumerate(self.slots) if r is not None and not r.done]
+        live = [i for i, r in enumerate(self.slots)
+                if r is not None and not r.done]
         if not live or self.cache is None:
             return 0
-        logits, self.cache = self._decode(self.params, jnp.asarray(self.next_tok),
-                                          self.cache)
+        with obs_trace.span("serve/decode", live=len(live)):
+            logits, self.cache = self._model_decode(jnp.asarray(self.next_tok))
         nxt = np.asarray(jnp.argmax(logits[:, -1, :self.cfg.vocab_size], -1))
         self.stats.decode_steps += 1
         for i in live:
@@ -125,6 +164,7 @@ class ContinuousBatcher:
                     len(r.generated) >= r.max_new:
                 r.done = True
                 self.stats.completed += 1
+                self._on_retire(i, r)
         self.next_tok = nxt[:, None].astype(np.int32)
         return len([i for i in live if not self.slots[i].done])
 
@@ -133,4 +173,13 @@ class ContinuousBatcher:
             self.step()
             if not self.queue and all(r is None or r.done for r in self.slots):
                 break
+        self.publish_stats()
+        return self.stats
+
+    # -- observability --------------------------------------------------------
+    def publish_stats(self, metrics=None) -> ServeStats:
+        """Bridge ServeStats into the obs metrics registry (serve/* gauges)."""
+        if metrics is None:
+            from repro.obs.metrics import registry as metrics
+        metrics.observe_serve(self.stats)
         return self.stats

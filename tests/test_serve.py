@@ -1,0 +1,291 @@
+"""repro.serve — delta store, block pool pager, multi-user engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import PAGE_IN_TAG, PAGE_OUT_TAG
+from repro.comm.buckets import bucketize
+from repro.comm.codecs import decode
+from repro.core.compressors import Compressor, WireSpec, make_compressor
+from repro.configs import get_config
+from repro.models import init_params
+from repro.obs.metrics import MetricsRegistry
+from repro.serve import (BlockPool, DeltaCertificationError, DeltaServeEngine,
+                         DeltaStore, PersonalizedBatcher, PoolExhausted,
+                         ZERO_ROW, delta_from_params, params_from_delta,
+                         personalize_leaves)
+from repro.training.serving import Request
+
+BLOCK = 4096
+
+
+@pytest.fixture(scope="module")
+def base():
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _store(params, compressor="top_k", n_users=4, **kw):
+    if compressor == "top_k":
+        kw.setdefault("k_frac", 0.01)
+    comp = make_compressor(compressor, **kw) if isinstance(compressor, str) \
+        else compressor
+    store = DeltaStore(params, comp, block_size=BLOCK, seed=7)
+    key = jax.random.PRNGKey(1)
+    for uid in range(n_users):
+        store.put(uid, personalize_leaves(params, jax.random.fold_in(key, uid)))
+    return store
+
+
+# ---------------------------------------------------------------------------
+# deltas
+# ---------------------------------------------------------------------------
+def test_delta_roundtrip_certified_bit_exact(base):
+    cfg, params = base
+    store = _store(params, n_users=2)
+    for uid in store.user_ids():
+        carrier = np.asarray(decode(store.payload(uid)))
+        # decode equals the compressor's own carrier bit-for-bit
+        pers = personalize_leaves(params, jax.random.fold_in(
+            jax.random.PRNGKey(1), uid))
+        pers_blocks, _ = bucketize(pers, BLOCK)
+        ref = store.compressor(store.user_key(uid),
+                               (pers_blocks - store.base_blocks).reshape(-1))
+        assert carrier.tobytes() == np.asarray(ref).tobytes()
+
+
+def test_params_from_delta_reconstructs(base):
+    """Untouched leaves come back bitwise equal to the base; personalized
+    leaves come back base + carrier."""
+    cfg, params = base
+    store = _store(params, n_users=1, k_frac=0.01)
+    rec = store.personalized_params(0)
+    flat_b = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_r = jax.tree_util.tree_leaves(rec)
+    touched = untouched = 0
+    for (path, pb), pr in zip(flat_b, flat_r):
+        name = jax.tree_util.keystr(path).lower()
+        same = np.asarray(pb).tobytes() == np.asarray(pr, np.asarray(pb).dtype).tobytes()
+        if "norm" in name:
+            touched += 0 if same else 1
+        elif same:
+            untouched += 1
+    assert untouched > 0          # non-personalized leaves identical to base
+    assert touched > 0            # at least one personalized leaf changed
+
+
+def test_quant_delta_certifies(base):
+    """Stochastic qsgd certifies too: the per-user key makes re-encode
+    deterministic."""
+    cfg, params = base
+    store = _store(params, "qsgd", n_users=1, bits=8)
+    p = store.payload(0)
+    assert p.scheme == "quant"
+    rec = store.personalized_params(0)
+    assert jax.tree_util.tree_structure(rec) == \
+        jax.tree_util.tree_structure(params)
+
+
+def test_certification_rejects_nondeterministic_compressor(base):
+    cfg, params = base
+    calls = {"n": 0}
+
+    def flaky(key, x):
+        calls["n"] += 1
+        return x + (0.0 if calls["n"] == 1 else 1.0)
+
+    comp = Compressor("flaky", flaky, eta=0.0, omega=0.0, bits_per_dim=32.0,
+                      wire=WireSpec(scheme="dense"))
+    store = DeltaStore(params, comp, block_size=BLOCK)
+    with pytest.raises(DeltaCertificationError):
+        store.put(0, personalize_leaves(params, jax.random.PRNGKey(3)))
+
+
+def test_store_charges_page_out(base):
+    cfg, params = base
+    store = _store(params, n_users=3)
+    tags = store.ledger.bytes_by_tag()
+    assert tags[PAGE_OUT_TAG] == store.total_payload_bytes()
+    assert PAGE_IN_TAG not in tags  # nothing paged in yet
+
+
+# ---------------------------------------------------------------------------
+# pool
+# ---------------------------------------------------------------------------
+def test_pool_miss_hit_and_zero_block_aliasing(base):
+    cfg, params = base
+    store = _store(params, n_users=2)
+    reg = MetricsRegistry()
+    pool = BlockPool(store, capacity_blocks=16, metrics=reg)
+
+    before = store.ledger.bytes_by_tag().get(PAGE_IN_TAG, 0)
+    e = pool.acquire(0)                       # miss
+    after = store.ledger.bytes_by_tag()[PAGE_IN_TAG]
+    assert after - before == store.nbytes(0)  # miss charges payload.nbytes
+    assert pool.misses == 1 and pool.hits == 0
+
+    # zero blocks alias the shared row 0: resident cost is O(delta blocks)
+    assert e.n_blocks < store.layout.n_buckets
+    assert np.sum(e.table != ZERO_ROW) == e.n_blocks
+    assert ZERO_ROW not in e.rows
+
+    e2 = pool.acquire(0)                      # hit: zero bytes, same entry
+    assert e2 is e and e.pins == 2
+    assert store.ledger.bytes_by_tag()[PAGE_IN_TAG] == after
+    assert pool.hits == 1
+    pool.release(0), pool.release(0)
+    assert reg.serve_stats()["pool/hits"] == 1.0
+
+
+def test_pool_lru_evicts_unpinned_oldest(base):
+    cfg, params = base
+    store = _store(params, n_users=3)
+    per_user = BlockPool(store, capacity_blocks=64).acquire(0).n_blocks
+    pool = BlockPool(store, capacity_blocks=2 * per_user)
+    pool.acquire(0); pool.release(0)
+    pool.acquire(1); pool.release(1)
+    pool.acquire(2); pool.release(2)          # evicts user 0 (oldest)
+    assert pool.evictions >= 1
+    assert not pool.is_resident(0)
+    assert pool.is_resident(2)
+    # re-acquiring the evicted user is a fresh miss (pages + charges again)
+    before = store.ledger.bytes_by_tag()[PAGE_IN_TAG]
+    pool.acquire(0)
+    assert store.ledger.bytes_by_tag()[PAGE_IN_TAG] - before == store.nbytes(0)
+
+
+def test_pool_pinned_entries_never_evicted(base):
+    cfg, params = base
+    store = _store(params, n_users=3)
+    per_user = BlockPool(store, capacity_blocks=64).acquire(0).n_blocks
+    pool = BlockPool(store, capacity_blocks=2 * per_user)
+    pool.acquire(0)                            # pinned
+    pool.acquire(1)                            # pinned
+    with pytest.raises(PoolExhausted):
+        pool.acquire(2)
+    assert pool.is_resident(0) and pool.is_resident(1)
+    pool.release(0)
+    pool.acquire(2)                            # now user 0 can be evicted
+    assert not pool.is_resident(0)
+    assert pool.is_resident(1)
+
+
+def test_pool_release_without_acquire_raises(base):
+    cfg, params = base
+    store = _store(params, n_users=1)
+    pool = BlockPool(store, capacity_blocks=8)
+    pool.acquire(0); pool.release(0)
+    with pytest.raises(RuntimeError):
+        pool.release(0)
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+def test_engine_bitwise_identical_to_materialized(base):
+    cfg, params = base
+    store = _store(params, n_users=2)
+    pool = BlockPool(store, capacity_blocks=16)
+    eng = DeltaServeEngine(cfg, store, max_len=32)
+    pool.acquire(0); pool.acquire(1)
+    tables = np.stack([pool.table_for(0), pool.table_for(1)])
+    toks = np.array([[1, 2, 3, 4], [5, 6, 7, 8]], np.int32)
+
+    logits, cache = eng.prefill(pool, tables, toks)
+    eff = eng.eff_blocks_for([store.personalized_params(0),
+                              store.personalized_params(1)])
+    lm, cm = eng.prefill_materialized(eff, toks)
+    assert np.asarray(logits).tobytes() == np.asarray(lm).tobytes()
+
+    tok = np.asarray(jnp.argmax(logits[:, -1, :cfg.vocab_size],
+                                -1))[:, None].astype(np.int32)
+    for _ in range(3):
+        logits, cache = eng.decode(pool, tables, tok, cache)
+        lm, cm = eng.decode_materialized(eff, tok, cm)
+        assert np.asarray(logits).tobytes() == np.asarray(lm).tobytes()
+        tok = np.asarray(jnp.argmax(logits[:, -1, :cfg.vocab_size],
+                                    -1))[:, None].astype(np.int32)
+
+
+def test_engine_no_per_user_recompile(base):
+    cfg, params = base
+    store = _store(params, n_users=4)
+    pool = BlockPool(store, capacity_blocks=32)
+    eng = DeltaServeEngine(cfg, store, max_len=32)
+    toks = np.array([[1, 2, 3], [4, 5, 6]], np.int32)
+    for pair in ((0, 1), (2, 3), (1, 3)):
+        tables = np.stack([pool.acquire(u).table for u in pair])
+        logits, cache = eng.prefill(pool, tables, toks)
+        tok = np.asarray(jnp.argmax(logits[:, -1, :cfg.vocab_size],
+                                    -1))[:, None].astype(np.int32)
+        eng.decode(pool, tables, tok, cache)
+        for u in pair:
+            pool.release(u)
+    sizes = eng.compile_cache_sizes()
+    assert sizes == {"prefill": 1, "decode": 1}
+
+
+def test_engine_rejects_encdec_configs(base):
+    import dataclasses
+    cfg, params = base
+    store = _store(params, n_users=0)
+    bad = dataclasses.replace(cfg, enc_layers=2)
+    with pytest.raises(NotImplementedError):
+        DeltaServeEngine(bad, store)
+
+
+# ---------------------------------------------------------------------------
+# personalized batcher (end to end)
+# ---------------------------------------------------------------------------
+def test_personalized_batcher_serves_and_unpins(base):
+    cfg, params = base
+    store = _store(params, n_users=5)
+    pool = BlockPool(store, capacity_blocks=32)
+    b = PersonalizedBatcher(cfg, store, pool, n_slots=2, max_len=64)
+    rng = np.random.default_rng(0)
+    for rid in range(5):
+        L = int(rng.integers(3, 10))
+        b.submit(Request(rid=rid, prompt=rng.integers(
+            1, cfg.vocab_size, size=L).astype(np.int32), max_new=4,
+            user_id=rid))
+    stats = b.run(max_ticks=200)
+    assert stats.completed == 5
+    assert pool.misses == 5                   # each user paged in once
+    assert sum(e.pins for e in pool._entries.values()) == 0
+    assert np.all(b._tables == ZERO_ROW)      # retired slots cleared
+
+
+def test_personalized_batcher_base_user_and_repeat_hits(base):
+    cfg, params = base
+    store = _store(params, n_users=1)
+    pool = BlockPool(store, capacity_blocks=16)
+    b = PersonalizedBatcher(cfg, store, pool, n_slots=2, max_len=64)
+    b.submit(Request(rid=0, prompt=np.array([3, 4], np.int32), max_new=3,
+                     user_id=None))           # base model, nothing pinned
+    b.submit(Request(rid=1, prompt=np.array([5, 6], np.int32), max_new=3,
+                     user_id=0))
+    b.submit(Request(rid=2, prompt=np.array([7, 8], np.int32), max_new=3,
+                     user_id=0))              # same user again -> pool hit
+    stats = b.run(max_ticks=100)
+    assert stats.completed == 3
+    assert pool.misses == 1 and pool.hits >= 1
+
+
+def test_personalized_differs_from_base_serving(base):
+    """The per-slot delta actually changes the served distribution: a user
+    with a large personalization decodes different logits than user None."""
+    cfg, params = base
+    comp = make_compressor("top_k", k_frac=0.05)
+    store = DeltaStore(params, comp, block_size=BLOCK, seed=7)
+    store.put(0, personalize_leaves(params, jax.random.PRNGKey(9),
+                                    match=("norm", "embed"), scale=1.0))
+    pool = BlockPool(store, capacity_blocks=64)
+    eng = DeltaServeEngine(cfg, store, max_len=16)
+    entry = pool.acquire(0)
+    toks = np.array([[1, 2, 3]], np.int32)
+    lp, _ = eng.prefill(pool, np.stack([entry.table]), toks)
+    lb, _ = eng.prefill(pool, np.zeros((1, store.layout.n_buckets), np.int32),
+                        toks)
+    assert np.asarray(lp).tobytes() != np.asarray(lb).tobytes()
